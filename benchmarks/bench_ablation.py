@@ -1,0 +1,55 @@
+"""Table 3 analogue: index-reuse + skip-build strategy ablation —
+reduction in index size and construction time."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.vectormaton import VectorMaton, VectorMatonConfig
+from repro.data.corpora import make_corpus
+
+from .common import emit, save_json
+
+
+def _build(vecs, seqs, **kw):
+    t0 = time.perf_counter()
+    vm = VectorMaton(vecs, seqs, VectorMatonConfig(M=8, ef_con=60, **kw))
+    return vm, time.perf_counter() - t0
+
+
+def main():
+    out = {}
+    for corpus, scale in (("spam", 1.0), ("words", 0.35)):
+        vecs, seqs = make_corpus(corpus, scale=scale)
+        full, t_full = _build(vecs, seqs, T=50)
+        plain, t_plain = _build(vecs, seqs, T=0, reuse=False,
+                                skip_build=False)
+        noreuse, t_noreuse = _build(vecs, seqs, T=50, reuse=False)
+        noskip, t_noskip = _build(vecs, seqs, T=0, reuse=True,
+                                  skip_build=False)
+        rec = {
+            "full": {"size": full.size_entries(), "time_s": t_full},
+            "no_strategies": {"size": plain.size_entries(),
+                              "time_s": t_plain},
+            "no_reuse": {"size": noreuse.size_entries(),
+                         "time_s": t_noreuse},
+            "no_skip_build": {"size": noskip.size_entries(),
+                              "time_s": t_noskip},
+        }
+        rec["size_reduction_pct"] = 100 * (1 - rec["full"]["size"]
+                                           / rec["no_strategies"]["size"])
+        rec["time_reduction_pct"] = 100 * (1 - t_full / t_plain)
+        out[corpus] = rec
+        emit(f"ablation/{corpus}/full", t_full * 1e6,
+             f"size={rec['full']['size']}")
+        emit(f"ablation/{corpus}/no_strategies", t_plain * 1e6,
+             f"size={rec['no_strategies']['size']};"
+             f"size_red={rec['size_reduction_pct']:.1f}%;"
+             f"time_red={rec['time_reduction_pct']:.1f}%")
+    save_json("ablation", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Fig. 10 analogue: index size + construction time, VectorMaton vs
+OptQuery (and the paper's size-ratio claim: up to 18×)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines import OptQuery
+from repro.core.vectormaton import VectorMaton, VectorMatonConfig
+from repro.data.corpora import make_corpus
+
+from .common import emit, save_json
+
+
+def run(corpus: str, scale: float, opt_max_len=None):
+    vecs, seqs = make_corpus(corpus, scale=scale)
+    t0 = time.perf_counter()
+    vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=50, M=8, ef_con=60))
+    t_vm = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    opt = OptQuery(vecs, seqs, M=8, ef_con=60, T=50,
+                   max_pattern_len=opt_max_len)
+    t_opt = time.perf_counter() - t0
+    rec = {
+        "corpus": corpus, "n": len(seqs),
+        "total_len": sum(len(s) for s in seqs),
+        "vm_size_entries": vm.size_entries(),
+        "vm_id_entries": vm.esam.total_id_entries(),
+        "vm_build_s": t_vm,
+        "opt_size_entries": opt.size_entries(),
+        "opt_insertions": opt.num_insertions(),
+        "opt_build_s": t_opt,
+        "size_ratio": opt.size_entries() / max(vm.size_entries(), 1),
+        "opt_max_pattern_len": opt_max_len,
+    }
+    emit(f"index_size/{corpus}/vm", t_vm * 1e6,
+         f"entries={rec['vm_size_entries']}")
+    emit(f"index_size/{corpus}/optquery", t_opt * 1e6,
+         f"entries={rec['opt_size_entries']};ratio={rec['size_ratio']:.1f}x")
+    return rec
+
+
+def main():
+    out = [run("spam", 1.0),          # full substring enumeration (small)
+           run("words", 0.5),
+           run("mtg", 0.1, opt_max_len=6)]
+    save_json("index_size", out)
+
+
+if __name__ == "__main__":
+    main()

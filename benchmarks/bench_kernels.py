@@ -1,0 +1,49 @@
+"""Kernel microbenchmarks: fused distance+top-k vs unfused reference.
+
+On this CPU container the Pallas kernels run in interpret mode (Python) —
+wall-clock is meaningless for them, so the timed comparison is the
+numpy/XLA:CPU execution of the same math, and the *derived* column carries
+the analytic TPU roofline for the kernel schedule (DESIGN.md §2):
+arithmetic intensity of the fused kernel ≈ Q·N·d MACs over (Q+N)·d reads
+vs the unfused path's extra Q·N distance-matrix round-trip."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.kernels import ops
+
+from .common import emit, save_json
+
+PEAK = 197e12
+BW = 819e9
+
+
+def main():
+    rng = np.random.default_rng(0)
+    rows = []
+    for (q, n, d, k) in [(128, 4096, 384, 10), (128, 65536, 384, 10),
+                         (1024, 65536, 768, 10)]:
+        x = rng.standard_normal((q, d)).astype(np.float32)
+        y = rng.standard_normal((n, d)).astype(np.float32)
+        t0 = time.perf_counter()
+        ops.topk_numpy(x, y, k)
+        host_s = time.perf_counter() - t0
+        flops = 2.0 * q * n * d
+        fused_bytes = (q * d + n * d + q * k * 8) * 4
+        unfused_bytes = fused_bytes + 2 * q * n * 4  # distance matrix w+r
+        t_fused = max(flops / PEAK, fused_bytes / BW)
+        t_unfused = max(flops / PEAK, unfused_bytes / BW)
+        rows.append({"q": q, "n": n, "d": d, "host_s": host_s,
+                     "tpu_fused_s": t_fused, "tpu_unfused_s": t_unfused,
+                     "fused_speedup": t_unfused / t_fused})
+        emit(f"kernel_topk/q{q}_n{n}_d{d}", host_s * 1e6,
+             f"tpu_fused_us={t_fused*1e6:.1f};"
+             f"fused_speedup={t_unfused/t_fused:.2f}x")
+    save_json("kernels", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Fig. 9 analogue: QPS vs recall for every method × pattern length.
+
+Datasets are the synthetic shape-mirrors of the paper's corpora
+(data/corpora.py); the claims validated are the *orderings*: VectorMaton ≈
+OptQuery ≫ PostFiltering at long patterns; PreFiltering slow at short
+patterns; VectorMaton recall flat in |p| while PostFiltering collapses.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines import (OptQuery, PostFiltering, PreFiltering,
+                                  ground_truth, recall)
+from repro.core.vectormaton import VectorMaton, VectorMatonConfig
+from repro.data.corpora import make_corpus, sample_patterns
+
+from .common import emit, save_json
+
+EF_GRID = [8, 16, 32, 64, 128]
+K = 10
+
+
+def run(corpus: str = "words", scale: float = 0.25, n_queries: int = 100,
+        seed: int = 0):
+    vecs, seqs = make_corpus(corpus, scale=scale, seed=seed)
+    dim = vecs.shape[1]
+    rng = np.random.default_rng(seed)
+
+    vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=50, M=8, ef_con=60))
+    pre = PreFiltering(vecs, seqs)
+    post = PostFiltering(vecs, seqs, M=8, ef_con=60)
+    try:
+        opt = OptQuery(vecs, seqs, M=8, ef_con=60, T=50, max_pattern_len=4)
+    except MemoryError:  # the paper's OOM row
+        opt = None
+
+    results = {"corpus": corpus, "n": len(seqs),
+               "total_len": sum(len(s) for s in seqs), "curves": {}}
+    for plen in (2, 3, 4):
+        pats = sample_patterns(seqs, plen, n_queries, seed=seed)
+        queries = rng.standard_normal((n_queries, dim)).astype(np.float32)
+        gts = [ground_truth(vecs, vm.esam, p, q, K)
+               for q, p in zip(queries, pats)]
+        for name, idx in [("VectorMaton", vm), ("PreFiltering", pre),
+                          ("PostFiltering", post), ("OptQuery", opt)]:
+            if idx is None:
+                continue
+            curve = []
+            for ef in EF_GRID:
+                t0 = time.perf_counter()
+                recs = [recall(idx.query(q, p, K, ef_search=ef)[1], gt)
+                        for (q, p), gt in zip(zip(queries, pats), gts)]
+                dt = time.perf_counter() - t0
+                curve.append({"ef": ef, "qps": n_queries / dt,
+                              "recall": float(np.mean(recs))})
+                if name == "PreFiltering":
+                    break  # no ef dependence
+            results["curves"][f"{name}|p{plen}"] = curve
+            best = max(curve, key=lambda c: c["recall"])
+            emit(f"qps_recall/{corpus}/{name}/p{plen}",
+                 1e6 / best["qps"],
+                 f"recall={best['recall']:.3f};qps={best['qps']:.0f}")
+    save_json(f"qps_recall_{corpus}", results)
+    return results
+
+
+def main():
+    for corpus in ("spam", "words"):
+        run(corpus)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Roofline summary: reads results/dryrun/*.json and prints the per-cell
+three-term table (the §Roofline deliverable in CSV form)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit, save_json
+
+
+def main():
+    base = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "dryrun")
+    rows = []
+    for f in sorted(glob.glob(os.path.join(base, "*__singlepod.json"))):
+        d = json.load(open(f))
+        name = f"{d['arch']}/{d['shape']}"
+        if "skipped" in d:
+            emit(f"roofline/{name}", 0.0, "SKIP")
+            continue
+        if "error" in d:
+            emit(f"roofline/{name}", 0.0, "ERROR")
+            continue
+        r = d["roofline_s"]
+        dom = d["dominant"]
+        step_s = max(r.values())
+        mfu = d["model_flops_total"] / (max(r.values()) * 197e12
+                                        * d["chips"])
+        rows.append({**{"cell": name}, **r, "dominant": dom,
+                     "roofline_mfu": mfu,
+                     "fits": d["fits_16gb"],
+                     "peak_gb": d["per_device_peak_bytes"] / 1e9})
+        emit(f"roofline/{name}", step_s * 1e6,
+             f"dom={dom};mfu={mfu:.3f};fits={d['fits_16gb']}")
+    save_json("roofline", rows)
+
+
+if __name__ == "__main__":
+    main()

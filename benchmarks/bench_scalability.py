@@ -1,0 +1,66 @@
+"""Fig. 11 analogue: (a) index size/time vs data fraction — the paper's
+near-linear empirical growth despite the O(m^1.5) bound; (b) parallel
+construction speedup vs worker count."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.vectormaton import VectorMaton, VectorMatonConfig
+from repro.data.corpora import make_corpus
+
+from .common import emit, save_json
+
+
+def run_growth(corpus: str = "words", scale: float = 0.5):
+    vecs, seqs = make_corpus(corpus, scale=scale)
+    fractions = [0.2, 0.4, 0.6, 0.8, 1.0]
+    rows = []
+    for f in fractions:
+        n = max(4, int(len(seqs) * f))
+        t0 = time.perf_counter()
+        vm = VectorMaton(vecs[:n], seqs[:n],
+                         VectorMatonConfig(T=50, M=8, ef_con=60))
+        dt = time.perf_counter() - t0
+        m = sum(len(s) for s in seqs[:n])
+        rows.append({"fraction": f, "m": m,
+                     "size_entries": vm.size_entries(),
+                     "id_entries": vm.esam.total_id_entries(),
+                     "states": vm.esam.num_states,
+                     "build_s": dt})
+        emit(f"scalability/{corpus}/f{f}", dt * 1e6,
+             f"m={m};entries={rows[-1]['size_entries']}")
+    # near-linearity check: growth exponent of size vs m (paper: ~1)
+    ms = np.log([r["m"] for r in rows])
+    sz = np.log([r["id_entries"] for r in rows])
+    slope = float(np.polyfit(ms, sz, 1)[0])
+    emit(f"scalability/{corpus}/growth_exponent", 0.0, f"slope={slope:.3f}")
+    return {"rows": rows, "growth_exponent": slope}
+
+
+def run_parallel(corpus: str = "mtg", scale: float = 0.08):
+    vecs, seqs = make_corpus(corpus, scale=scale)
+    rows = []
+    base = None
+    for workers in (1, 2, 4):
+        t0 = time.perf_counter()
+        VectorMaton(vecs, seqs, VectorMatonConfig(T=30, M=8, ef_con=60),
+                    workers=workers)
+        dt = time.perf_counter() - t0
+        base = base or dt
+        rows.append({"workers": workers, "build_s": dt,
+                     "speedup": base / dt})
+        emit(f"parallel_build/{corpus}/w{workers}", dt * 1e6,
+             f"speedup={base/dt:.2f}x")
+    return rows
+
+
+def main():
+    out = {"growth": run_growth(), "parallel": run_parallel()}
+    save_json("scalability", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Fig. 12 analogue: skip-build threshold T — index size / build time /
+query trade-off with mixed pattern lengths |p| ∈ {2,3,4}."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines import ground_truth, recall
+from repro.core.vectormaton import VectorMaton, VectorMatonConfig
+from repro.data.corpora import make_corpus, sample_patterns
+
+from .common import emit, save_json
+
+
+def main():
+    vecs, seqs = make_corpus("words", scale=0.35)
+    dim = vecs.shape[1]
+    rng = np.random.default_rng(0)
+    pats = (sample_patterns(seqs, 2, 30) + sample_patterns(seqs, 3, 30)
+            + sample_patterns(seqs, 4, 30))
+    queries = rng.standard_normal((len(pats), dim)).astype(np.float32)
+    rows = []
+    for T in (10, 50, 200, 1000, 5000):
+        t0 = time.perf_counter()
+        vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=T, M=8, ef_con=60))
+        build_s = time.perf_counter() - t0
+        gts = [ground_truth(vecs, vm.esam, p, q, 10)
+               for q, p in zip(queries, pats)]
+        t0 = time.perf_counter()
+        recs = [recall(vm.query(q, p, 10, ef_search=64)[1], gt)
+                for (q, p), gt in zip(zip(queries, pats), gts)]
+        qps = len(pats) / (time.perf_counter() - t0)
+        rows.append({"T": T, "build_s": build_s,
+                     "size_entries": vm.size_entries(),
+                     "hnsw_states": vm.stats()["hnsw_states"],
+                     "qps": qps, "recall": float(np.mean(recs))})
+        emit(f"threshold/T{T}", 1e6 / qps,
+             f"recall={rows[-1]['recall']:.3f};"
+             f"size={rows[-1]['size_entries']};build_s={build_s:.1f}")
+    save_json("threshold", rows)
+
+
+if __name__ == "__main__":
+    main()

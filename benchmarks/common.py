@@ -1,0 +1,56 @@
+"""Shared benchmark utilities.
+
+All benchmarks print ``name,us_per_call,derived`` CSV rows (harness
+contract) and persist richer JSON under results/bench/.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "bench")
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def save_json(name: str, payload) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def time_calls(fn: Callable, n: int, warmup: int = 2) -> float:
+    """Mean seconds per call."""
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def qps_recall_curve(index, queries, patterns, k, ef_grid, vectors, esam,
+                     query_kwargs=None) -> List[Dict]:
+    """Sweep ef_search, measure QPS + mean recall (paper Fig. 9 protocol)."""
+    from repro.core.baselines import ground_truth, recall
+    out = []
+    gts = [ground_truth(vectors, esam, p, q, k)
+           for q, p in zip(queries, patterns)]
+    for ef in ef_grid:
+        t0 = time.perf_counter()
+        recs = []
+        for (q, p), gt in zip(zip(queries, patterns), gts):
+            d, ids = index.query(q, p, k, ef_search=ef)
+            recs.append(recall(ids, gt))
+        dt = time.perf_counter() - t0
+        out.append({"ef_search": ef, "qps": len(queries) / dt,
+                    "recall": float(np.mean(recs))})
+    return out

@@ -1,0 +1,62 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV; JSON details land in
+results/bench/.
+
+  bench_qps_recall    Fig. 9   QPS vs recall × method × |p|
+  bench_index_size    Fig. 10  index size + construction time vs OptQuery
+  bench_scalability   Fig. 11  size/time growth + parallel build speedup
+  bench_threshold     Fig. 12  skip-build threshold T study
+  bench_ablation      Table 3  strategy ablation
+  bench_kernels       —        fused distance+top-k kernel analysis
+  bench_roofline      —        §Roofline table from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (bench_ablation, bench_index_size, bench_kernels,
+               bench_qps_recall, bench_roofline, bench_scalability,
+               bench_threshold)
+
+ALL = [
+    ("qps_recall", bench_qps_recall),
+    ("index_size", bench_index_size),
+    ("scalability", bench_scalability),
+    ("threshold", bench_threshold),
+    ("ablation", bench_ablation),
+    ("kernels", bench_kernels),
+    ("roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = []
+    for name, mod in ALL:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            mod.main()
+            print(f"# {name} done in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Distributed pattern-constrained search: shard_map over a device mesh.
+
+Demonstrates the pod-scale serving path (DESIGN.md §4): the vector table
+row-sharded across the `data` axis, pattern filtering as a validity mask,
+fused local top-k + all-gather merge.  Runs on 8 placeholder CPU devices.
+
+    PYTHONPATH=src python examples/distributed_serve.py
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.esam import ESAM
+from repro.data.corpora import make_corpus, sample_patterns
+from repro.distributed.sharded_search import (replicate, shard_rows,
+                                              sharded_topk)
+from repro.kernels import ops
+from repro.launch.mesh import make_host_mesh
+
+mesh = make_host_mesh(data=8, model=1)
+print(f"mesh: {mesh.shape} over {len(jax.devices())} devices")
+
+# --- corpus + pattern filter (ESAM on the host, as in production) -------
+vecs, seqs = make_corpus("prot", scale=0.15)
+n = (len(vecs) // 8) * 8
+vecs, seqs = vecs[:n], seqs[:n]
+esam = ESAM()
+esam.add_sequences(seqs)
+esam.finalize()
+print(f"{n} records, {esam.num_states} automaton states")
+
+base = shard_rows(mesh, jnp.asarray(vecs))
+rng = np.random.default_rng(0)
+queries = rng.standard_normal((32, vecs.shape[1])).astype(np.float32)
+q_dev = replicate(mesh, jnp.asarray(queries))
+
+for pattern in sample_patterns(seqs, 3, 3):
+    ids = esam.ids_for_pattern(pattern)
+    mask = np.zeros(n, dtype=bool)
+    mask[ids] = True
+    m_dev = shard_rows(mesh, jnp.asarray(mask))
+    with mesh:
+        t0 = time.time()
+        d, i = sharded_topk(mesh, q_dev, base, 10, valid_mask=m_dev)
+        d.block_until_ready()
+        dt = time.time() - t0
+    # verify against single-host exact search over the filtered subset
+    rv, ri = ops.topk_numpy(queries, vecs[ids], min(10, len(ids)))
+    got = np.asarray(d)[:, :min(10, len(ids))]
+    assert np.allclose(got, rv, atol=1e-3), "sharded result mismatch"
+    print(f"pattern {pattern!r}: |V_p|={len(ids):5d}  "
+          f"32 queries in {dt*1e3:.1f} ms  (verified exact)")
+print("sharded search verified against single-host brute force")

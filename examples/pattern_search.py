@@ -1,0 +1,75 @@
+"""Serve a small model + VectorMaton with batched pattern-constrained
+requests — the end-to-end serving driver (deliverable b).
+
+Embeds a corpus with a (smoke-sized) qwen3 LM, indexes the embeddings with
+their sequences, serves a batch of mixed-pattern requests, reports QPS and
+recall, then checkpoints and restores the engine.
+
+    PYTHONPATH=src python examples/pattern_search.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.baselines import ground_truth, recall
+from repro.core.vectormaton import VectorMatonConfig
+from repro.data.corpora import make_corpus, sample_patterns
+from repro.models.transformer import LM
+from repro.serve.engine import Request, RetrievalEngine, embed_texts
+
+# --- 1. the embedder: a reduced qwen3 config ----------------------------
+cfg = smoke_config("qwen3-4b")
+model = LM(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+# --- 2. a corpus of (sequence) records; embed them ----------------------
+_, sequences = make_corpus("mtg", scale=0.05)
+print(f"corpus: {len(sequences)} records, "
+      f"total length {sum(len(s) for s in sequences)}")
+
+
+def tokenize(s: str, width: int = 32) -> np.ndarray:
+    raw = np.frombuffer(s[:width].ljust(width).encode(), dtype=np.uint8)
+    return (raw % cfg.vocab_size).astype(np.int32)
+
+
+batches = [np.stack([tokenize(s) for s in sequences[i:i + 16]])
+           for i in range(0, len(sequences), 16)]
+t0 = time.time()
+vectors = embed_texts(model, params, batches).astype(np.float32)
+print(f"embedded {len(vectors)} records in {time.time()-t0:.1f}s "
+      f"(dim={vectors.shape[1]})")
+
+# --- 3. index + serve batched requests ----------------------------------
+engine = RetrievalEngine(vectors, sequences,
+                         VectorMatonConfig(T=40, M=8, ef_con=50))
+print("index:", engine.index.stats())
+
+rng = np.random.default_rng(1)
+patterns = (sample_patterns(sequences, 2, 40)
+            + sample_patterns(sequences, 3, 40)
+            + sample_patterns(sequences, 4, 40))
+requests = [Request(vector=vectors[rng.integers(len(vectors))]
+                    + 0.1 * rng.standard_normal(vectors.shape[1]
+                                                ).astype(np.float32),
+                    pattern=p, k=10) for p in patterns]
+t0 = time.time()
+responses = engine.serve_batch(requests)
+dt = time.time() - t0
+recalls = [recall(resp.ids,
+                  ground_truth(engine.index.vectors, engine.index.esam,
+                               req.pattern, req.vector, req.k))
+           for req, resp in zip(requests, responses)]
+print(f"{len(requests)} requests in {dt:.2f}s ({len(requests)/dt:.0f} QPS)"
+      f", mean recall@10 = {np.mean(recalls):.3f}")
+
+# --- 4. fault tolerance: checkpoint, restore, keep serving --------------
+engine.checkpoint("/tmp/vectormaton_engine")
+restored = RetrievalEngine.restore("/tmp/vectormaton_engine")
+r1 = engine.serve(requests[0])
+r2 = restored.serve(requests[0])
+assert np.array_equal(r1.ids, r2.ids)
+print("checkpoint/restore verified: identical results after restart")

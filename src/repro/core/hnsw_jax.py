@@ -1,0 +1,111 @@
+"""Device-side HNSW beam search — `lax.while_loop` over packed arrays.
+
+TPU-native replacement for heap-based best-first search (DESIGN.md §2): the
+candidate list is a fixed-size (ef,) sorted register file folded with
+`jax.lax.top_k`; visited state is a dense (n,) mask updated by scatter.  One
+loop iteration expands exactly one node: gather its ≤2M neighbours, batch
+their distances (VPU/MXU), fold into the list.  Matches `HNSW.search` on
+recall (tie-breaks aside) — asserted in tests/test_hnsw.py.
+
+All shapes are static: (k, ef, max_iter) are trace-time constants, so the
+same compiled artifact serves every query against a given graph.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_INF = jnp.inf
+
+
+@functools.partial(jax.jit, static_argnames=("k", "ef", "max_iter", "metric"))
+def hnsw_search(vectors: jax.Array, ids: jax.Array, level0: jax.Array,
+                entry: jax.Array, query: jax.Array, *, k: int, ef: int,
+                max_iter: int | None = None, metric: str = "l2"
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Single-query beam search on the level-0 graph.
+
+    vectors : (V, d) global vector table
+    ids     : (n,)  local slot -> global id (int32)
+    level0  : (n, 2M) neighbour slots, -1 padded
+    entry   : ()   entry slot
+    query   : (d,)
+
+    Returns (dists (k,), global_ids (k,)) ascending; unfilled = (inf, -1).
+    """
+    n = ids.shape[0]
+    if max_iter is None:
+        max_iter = 4 * ef + 16
+    q = query.astype(jnp.float32)
+
+    def dist_of(slots: jax.Array) -> jax.Array:
+        g = ids[jnp.clip(slots, 0, n - 1)]
+        v = vectors[g].astype(jnp.float32)
+        if metric == "l2":
+            diff = v - q[None, :]
+            return jnp.sum(diff * diff, axis=-1)
+        return -(v @ q)
+
+    # --- initial candidate list -------------------------------------------
+    cand_s = jnp.full((ef,), -1, jnp.int32).at[0].set(entry.astype(jnp.int32))
+    cand_d = jnp.full((ef,), _INF, jnp.float32).at[0].set(
+        dist_of(entry[None].astype(jnp.int32))[0])
+    expanded = jnp.zeros((ef,), jnp.bool_)
+    visited = jnp.zeros((n,), jnp.bool_).at[entry].set(True)
+
+    def cond(state):
+        i, cand_d, cand_s, expanded, visited = state
+        unexp = jnp.where(expanded | (cand_s < 0), _INF, cand_d)
+        best_unexp = jnp.min(unexp)
+        worst_kept = jnp.max(jnp.where(cand_s < 0, -_INF, cand_d))
+        return (i < max_iter) & jnp.isfinite(best_unexp) & (
+            best_unexp <= worst_kept)
+
+    def body(state):
+        i, cand_d, cand_s, expanded, visited = state
+        unexp = jnp.where(expanded | (cand_s < 0), _INF, cand_d)
+        pick = jnp.argmin(unexp)
+        expanded = expanded.at[pick].set(True)
+        node = cand_s[pick]
+
+        nb = level0[jnp.clip(node, 0, n - 1)]                  # (2M,)
+        valid = (nb >= 0) & ~visited[jnp.clip(nb, 0, n - 1)]
+        nd = jnp.where(valid, dist_of(nb), _INF)
+        visited = visited.at[jnp.clip(nb, 0, n - 1)].set(
+            visited[jnp.clip(nb, 0, n - 1)] | (nb >= 0))
+
+        # fold neighbours into the ef-list
+        all_d = jnp.concatenate([cand_d, nd])
+        all_s = jnp.concatenate([cand_s, jnp.where(valid, nb, -1)])
+        all_e = jnp.concatenate([expanded, jnp.zeros_like(valid)])
+        neg_top, pos = jax.lax.top_k(-all_d, ef)
+        cand_d = -neg_top
+        cand_s = all_s[pos]
+        expanded = all_e[pos]
+        return (i + 1, cand_d, cand_s, expanded, visited)
+
+    _, cand_d, cand_s, _, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), cand_d, cand_s, expanded, visited))
+
+    kk = min(k, ef)
+    neg_top, pos = jax.lax.top_k(-cand_d, kk)
+    out_d = -neg_top
+    out_s = cand_s[pos]
+    out_g = jnp.where(out_s >= 0, ids[jnp.clip(out_s, 0, n - 1)], -1)
+    out_d = jnp.where(out_s >= 0, out_d, _INF)
+    if kk < k:
+        out_d = jnp.pad(out_d, (0, k - kk), constant_values=_INF)
+        out_g = jnp.pad(out_g, (0, k - kk), constant_values=-1)
+    return out_d, out_g.astype(jnp.int32)
+
+
+def hnsw_search_batch(vectors, ids, level0, entry, queries, *, k, ef,
+                      max_iter=None, metric="l2"):
+    """vmap over queries: (B, d) -> (B, k) dists + global ids."""
+    fn = functools.partial(hnsw_search, k=k, ef=ef, max_iter=max_iter,
+                           metric=metric)
+    return jax.vmap(lambda q: fn(vectors, ids, level0, entry, q))(queries)

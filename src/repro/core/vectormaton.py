@@ -1,0 +1,339 @@
+"""VectorMaton — pattern-constrained ANNS index (paper §4).
+
+Build (Algorithm 3 Build):
+  1. ESAM over the sequence collection, with online vector-ID propagation.
+  2. Reverse-topological sweep over the transition DAG.  For each state u:
+       - index-reuse: inherit(u) = the direct successor with the largest
+         covered set; base(u) = V_u \\ V_inherit(u)   (Lemma 4 exact cover —
+         coverage is defined recursively along the inheritance chain, so the
+         union of base sets along u's chain is exactly V_u);
+       - skip-build: |base(u)| < T  ->  raw ID set (brute-force at query
+         time); otherwise an HNSW graph over base(u).
+
+Query (Algorithm 3 Query): walk the automaton along the pattern; then walk
+the inheritance chain from the reached state, searching every base index on
+the chain (raw sets are batched into ONE fused distance+top-k kernel call —
+the TPU adaptation of the paper's per-set brute force), and merge top-k.
+
+Maintenance (paper §5): online insert extends the automaton and patches the
+affected base indexes without a global rebuild; deletes are lazy marks
+filtered at query time.
+
+Parallel build mirrors the paper's concurrent ready-queue over reverse
+topological order (thread pool; NumPy releases the GIL inside distance
+batches).
+"""
+
+from __future__ import annotations
+
+import queue as queue_mod
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .esam import ESAM, ROOT
+from .hnsw import HNSW
+
+_RAW = 0
+_HNSW = 1
+
+
+@dataclass
+class VectorMatonConfig:
+    T: int = 200                 # skip-build threshold (paper default)
+    M: int = 16                  # HNSW max degree
+    ef_con: int = 200            # HNSW construction beam
+    metric: str = "l2"
+    reuse: bool = True           # index-reuse strategy (ablation switch)
+    skip_build: bool = True      # skip-build strategy (ablation switch)
+    seed: int = 0
+    backend: str = "numpy"       # 'numpy' host path | 'jax' device path
+
+
+@dataclass
+class _StateIndex:
+    kind: int                    # _RAW | _HNSW
+    raw_ids: Optional[np.ndarray] = None
+    graph: Optional[HNSW] = None
+
+    @property
+    def n_indexed(self) -> int:
+        return (len(self.raw_ids) if self.kind == _RAW else len(self.graph))
+
+    @property
+    def size_entries(self) -> int:
+        return (len(self.raw_ids) if self.kind == _RAW
+                else self.graph.size_entries)
+
+
+class VectorMaton:
+    """The paper's index.  ``vectors``: (n, d) global table; ``sequences``:
+    list of symbol sequences (strings or lists)."""
+
+    def __init__(self, vectors: np.ndarray, sequences: Sequence[Sequence],
+                 config: Optional[VectorMatonConfig] = None,
+                 workers: int = 1) -> None:
+        self.config = config or VectorMatonConfig()
+        self.vectors = np.ascontiguousarray(vectors, dtype=np.float32)
+        self.esam = ESAM()
+        self.inherit: List[int] = []
+        self.state_index: List[Optional[_StateIndex]] = []
+        self.deleted: set = set()
+        self._lock = threading.Lock()
+        for s in sequences:
+            self.esam.add_sequence(s)
+        self.esam.finalize()
+        self._build_state_indexes(workers=workers)
+
+    # ------------------------------------------------------------------ #
+    # index construction (Algorithm 3 lines 17-21)
+    # ------------------------------------------------------------------ #
+
+    def _pick_inherit(self, u: int) -> int:
+        """Direct successor with the largest covered set (== |V_succ|)."""
+        if not self.config.reuse:
+            return -1
+        best, best_size = -1, 0
+        for v in self.esam.trans[u].values():
+            sz = len(self.esam.state_ids(v))
+            if sz > best_size:
+                best, best_size = v, sz
+        return best
+
+    def _base_ids(self, u: int, h: int) -> np.ndarray:
+        vu = self.esam.state_ids(u)
+        if h == -1:
+            return vu
+        vh = self.esam.state_ids(h)
+        # V_h ⊆ V_u (DAG monotonicity) — difference by sorted merge.
+        return np.setdiff1d(vu, vh, assume_unique=True)
+
+    def _build_one(self, u: int) -> _StateIndex:
+        h = self.inherit[u]
+        base = self._base_ids(u, h)
+        cfg = self.config
+        if cfg.skip_build and len(base) < cfg.T:
+            return _StateIndex(_RAW, raw_ids=base)
+        if len(base) == 0:
+            return _StateIndex(_RAW, raw_ids=base)
+        g = HNSW(self.vectors, M=cfg.M, ef_con=cfg.ef_con, metric=cfg.metric,
+                 seed=cfg.seed + u)
+        g.build(base)
+        return _StateIndex(_HNSW, graph=g)
+
+    def _build_state_indexes(self, workers: int = 1) -> None:
+        n = self.esam.num_states
+        self.inherit = [self._pick_inherit(u) for u in range(n)]
+        self.state_index = [None] * n
+        if workers <= 1:
+            for u in self.esam.topo_order()[::-1]:
+                self.state_index[int(u)] = self._build_one(int(u))
+            return
+        self._parallel_build(workers)
+
+    def _parallel_build(self, workers: int) -> None:
+        """Paper §4.3 'parallel construction': a concurrent ready-queue over
+        reverse topological order.  A state is ready once all its transition
+        successors are built (its base set only depends on V sets, but we
+        keep the paper's dependency schedule so online-reuse variants that
+        consult successor indexes stay correct)."""
+        n = self.esam.num_states
+        remaining = np.zeros(n, dtype=np.int64)
+        preds: List[List[int]] = [[] for _ in range(n)]
+        for u in range(n):
+            succs = self.esam.trans[u].values()
+            remaining[u] = len(succs)
+            for v in succs:
+                preds[v].append(u)
+        ready: "queue_mod.Queue[int]" = queue_mod.Queue()
+        for u in range(n):
+            if remaining[u] == 0:
+                ready.put(u)
+        done = threading.Event()
+        n_done = [0]
+
+        def worker() -> None:
+            while not done.is_set():
+                try:
+                    u = ready.get(timeout=0.05)
+                except queue_mod.Empty:
+                    continue
+                idx = self._build_one(u)
+                with self._lock:
+                    self.state_index[u] = idx
+                    n_done[0] += 1
+                    if n_done[0] == n:
+                        done.set()
+                    for p in preds[u]:
+                        remaining[p] -= 1
+                        if remaining[p] == 0:
+                            ready.put(p)
+
+        threads = [threading.Thread(target=worker) for _ in range(workers)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+    # ------------------------------------------------------------------ #
+    # query processing (Algorithm 3 Query)
+    # ------------------------------------------------------------------ #
+
+    def _chain(self, state: int) -> List[int]:
+        out = []
+        u = state
+        while u != -1:
+            out.append(u)
+            u = self.inherit[u]
+        return out
+
+    def query(self, v_q: np.ndarray, pattern: Sequence, k: int,
+              ef_search: int = 64) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-k (distances, global ids) among vectors whose sequence
+        contains ``pattern``.  Empty pattern == unconstrained ANN."""
+        st = self.esam.walk(pattern)
+        if st == -1:
+            return (np.empty(0, np.float32), np.empty(0, np.int64))
+        v_q = np.asarray(v_q, dtype=np.float32)
+        raw_ids: List[np.ndarray] = []
+        cand_d: List[np.ndarray] = []
+        cand_i: List[np.ndarray] = []
+        for u in self._chain(st):
+            idx = self.state_index[u]
+            if idx is None or idx.n_indexed == 0:
+                continue
+            if idx.kind == _RAW:
+                raw_ids.append(idx.raw_ids)
+            else:
+                d, i = idx.graph.search(v_q, k, ef_search)
+                cand_d.append(d)
+                cand_i.append(i)
+        if raw_ids:
+            ids = np.concatenate(raw_ids)
+            d, i = self._brute(v_q, ids, min(k, len(ids)))
+            cand_d.append(d)
+            cand_i.append(i)
+        if not cand_i:
+            return (np.empty(0, np.float32), np.empty(0, np.int64))
+        d = np.concatenate(cand_d)
+        i = np.concatenate(cand_i)
+        if self.deleted:
+            keep = ~np.isin(i, np.fromiter(self.deleted, dtype=np.int64))
+            d, i = d[keep], i[keep]
+        order = np.argsort(d, kind="stable")[:k]
+        return d[order], i[order]
+
+    def _brute(self, v_q: np.ndarray, ids: np.ndarray, k: int
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        sub = self.vectors[ids]
+        if self.config.backend == "jax":
+            import jax.numpy as jnp
+            from ..kernels import ops
+            d, li = ops.topk(jnp.asarray(v_q[None, :]), jnp.asarray(sub), k,
+                             metric=self.config.metric)
+            d = np.asarray(d[0])
+            li = np.asarray(li[0])
+            valid = li >= 0
+            return d[valid], ids[li[valid]]
+        from ..kernels import ops
+        d, li = ops.topk_numpy(v_q[None, :], sub, k,
+                               metric=self.config.metric)
+        valid = li[0] >= 0
+        return d[0][valid], ids[li[0][valid]]
+
+    # ------------------------------------------------------------------ #
+    # maintenance (paper §5)
+    # ------------------------------------------------------------------ #
+
+    def insert(self, vector: np.ndarray, sequence: Sequence) -> int:
+        """Online insert: extend automaton; patch base indexes of affected
+        states.  New states index only the new ID (their V starts at {i});
+        clones rebuild their base against the current best successor —
+        correctness over size-optimality, as in the paper's online update."""
+        i = self.esam.num_sequences
+        self.vectors = np.concatenate(
+            [self.vectors, np.asarray(vector, np.float32)[None, :]], axis=0)
+        for si in self.state_index:
+            if si is not None and si.kind == _HNSW:
+                si.graph.vectors = self.vectors
+        old_n = self.esam.num_states
+        self.esam.add_sequence(sequence)
+        self.esam.finalize()
+        n = self.esam.num_states
+        # new states (created by this sequence): fresh indexes
+        self.inherit.extend([-1] * (n - old_n))
+        self.state_index.extend([None] * (n - old_n))
+        for u in range(old_n, n):
+            vu = self.esam.state_ids(u)
+            if len(vu) > 1:
+                # clone: recompute inheritance against current successors
+                self.inherit[u] = self._pick_inherit(u)
+                self.state_index[u] = self._build_one(u)
+            else:
+                self.state_index[u] = _StateIndex(
+                    _RAW, raw_ids=np.asarray([i], dtype=np.int64))
+        # affected old states: those whose V gained i
+        for u in range(old_n):
+            vu = self.esam.state_ids(u)
+            if len(vu) == 0 or vu[-1] != i:
+                continue
+            h = self.inherit[u]
+            if h != -1:
+                vh = self.esam.state_ids(h)
+                if len(vh) and vh[-1] == i:
+                    continue  # coverage flows up the chain
+            idx = self.state_index[u]
+            if idx is None:
+                self.state_index[u] = _StateIndex(
+                    _RAW, raw_ids=np.asarray([i], dtype=np.int64))
+            elif idx.kind == _RAW:
+                idx.raw_ids = np.append(idx.raw_ids, i)
+                if (not self.config.skip_build
+                        or len(idx.raw_ids) >= 4 * self.config.T):
+                    pass  # promotion to HNSW is a rebuild concern; keep raw
+            else:
+                idx.graph.add(i)
+        return i
+
+    def delete(self, vector_id: int) -> None:
+        """Lazy deletion (paper §5): mark and filter at query time."""
+        self.deleted.add(int(vector_id))
+
+    # ------------------------------------------------------------------ #
+    # accounting / serialization
+    # ------------------------------------------------------------------ #
+
+    def size_entries(self) -> int:
+        """Paper's index-size metric: stored ID entries + graph edge slots +
+        automaton states/transitions."""
+        s = self.esam.num_states + self.esam.num_transitions
+        for idx in self.state_index:
+            if idx is not None:
+                s += idx.size_entries
+        return s
+
+    def stats(self) -> Dict[str, int]:
+        n_raw = sum(1 for i in self.state_index
+                    if i is not None and i.kind == _RAW)
+        n_hnsw = sum(1 for i in self.state_index
+                     if i is not None and i.kind == _HNSW)
+        return {
+            "states": self.esam.num_states,
+            "transitions": self.esam.num_transitions,
+            "total_id_entries": self.esam.total_id_entries(),
+            "raw_states": n_raw,
+            "hnsw_states": n_hnsw,
+            "size_entries": self.size_entries(),
+            "total_symbols": self.esam.total_symbols,
+        }
+
+    def save(self, path: str) -> None:
+        from ..distributed.checkpoint import save_vectormaton
+        save_vectormaton(self, path)
+
+    @classmethod
+    def load(cls, path: str) -> "VectorMaton":
+        from ..distributed.checkpoint import load_vectormaton
+        return load_vectormaton(cls, path)

@@ -1,0 +1,109 @@
+"""Synthetic corpora mirroring the paper's six datasets in *shape*.
+
+Offline container ⇒ no Hugging Face / SpamAssassin downloads; each corpus
+reproduces the structural statistics that drive VectorMaton behaviour —
+n, total sequence length, alphabet size, repeat structure, embedding dim —
+with a deterministic RNG.  Table 2 analogue (scaled to CPU budgets):
+
+    name        n      total len   dim   alphabet / flavour
+    spam       489      ~13.6k     384   word-like email subjects
+    words     2000      ~14k        64   short letter strings
+    mtg       3000     ~210k        96   sentence-like descriptions
+    prot      1500     ~380k        64   20-symbol amino-acid strings
+    code      4000     ~90k         96   identifier-style camelCase
+
+Sequences are generated from small Zipf vocabularies of reusable chunks so
+that substrings repeat across records — the property that makes the
+paper's equivalence-class compression (and the near-linear empirical index
+growth of Fig. 11) kick in.  Vectors are unit-normal with mild cluster
+structure (64 gaussian centers) so HNSW recall curves behave like real
+embeddings.
+"""
+
+from __future__ import annotations
+
+import string
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CorpusSpec:
+    name: str
+    n: int
+    dim: int
+    mean_len: int
+    alphabet: str
+    chunky: bool = True    # build sequences from a shared chunk vocabulary
+
+
+SPECS = {
+    "spam": CorpusSpec("spam", 489, 384, 28, string.ascii_lowercase + " "),
+    "words": CorpusSpec("words", 2000, 64, 7,
+                        string.ascii_lowercase, chunky=False),
+    "mtg": CorpusSpec("mtg", 3000, 96, 70, string.ascii_lowercase + " "),
+    "prot": CorpusSpec("prot", 1500, 64, 255, "ACDEFGHIKLMNPQRSTVWY"),
+    "code": CorpusSpec("code", 4000, 96, 22,
+                       string.ascii_letters + "_"),
+}
+
+
+def _chunk_vocab(rng: np.random.Generator, alphabet: str, n_chunks: int,
+                 lo: int, hi: int) -> List[str]:
+    return ["".join(rng.choice(list(alphabet), size=rng.integers(lo, hi)))
+            for _ in range(n_chunks)]
+
+
+def make_corpus(name: str, seed: int = 0, scale: float = 1.0
+                ) -> Tuple[np.ndarray, List[str]]:
+    """Returns (vectors (n, dim) float32, sequences list[str])."""
+    spec = SPECS[name]
+    rng = np.random.default_rng(np.random.SeedSequence([hash(name) % 2**31,
+                                                        seed]))
+    n = max(8, int(spec.n * scale))
+
+    # --- sequences -----------------------------------------------------
+    seqs: List[str] = []
+    if spec.chunky:
+        vocab = _chunk_vocab(rng, spec.alphabet, max(64, n // 8), 3, 9)
+        ranks = np.arange(1, len(vocab) + 1, dtype=np.float64)
+        p = 1.0 / ranks ** 1.05
+        p /= p.sum()
+        for _ in range(n):
+            target = max(3, int(rng.normal(spec.mean_len,
+                                           spec.mean_len / 3)))
+            parts: List[str] = []
+            cur = 0
+            while cur < target:
+                w = vocab[rng.choice(len(vocab), p=p)]
+                parts.append(w)
+                cur += len(w)
+            seqs.append("".join(parts)[:target + 8])
+    else:
+        for _ in range(n):
+            ln = max(2, int(rng.normal(spec.mean_len, 2)))
+            seqs.append("".join(rng.choice(list(spec.alphabet), size=ln)))
+
+    # --- vectors (clustered gaussians) ----------------------------------
+    n_centers = 64
+    centers = rng.standard_normal((n_centers, spec.dim)).astype(np.float32)
+    assign = rng.integers(0, n_centers, size=n)
+    vecs = (centers[assign]
+            + 0.5 * rng.standard_normal((n, spec.dim))).astype(np.float32)
+    return vecs, seqs
+
+
+def sample_patterns(seqs: List[str], length: int, count: int,
+                    seed: int = 0) -> List[str]:
+    """Query patterns sampled from substrings that actually occur
+    (paper §6.1 'Queries')."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, length]))
+    out = []
+    long_enough = [s for s in seqs if len(s) >= length]
+    for _ in range(count):
+        s = long_enough[rng.integers(0, len(long_enough))]
+        i = rng.integers(0, len(s) - length + 1)
+        out.append(s[i:i + length])
+    return out

@@ -1,0 +1,118 @@
+"""Activation-sharding context — explicit `with_sharding_constraint` anchors.
+
+GSPMD propagates shardings from parameters and inputs, but at a handful of
+junctions (vocab-sharded embedding gathers, scan carries, loss reductions)
+its cost model can legally pick a replicated layout — at 256-device scale
+that is a 16× activation blow-up.  Production frameworks pin activations at
+layer boundaries; this module is that pin.
+
+The context is trace-time state configured by the launcher (dry-run, train,
+serve) before tracing; model code calls `shard(x, kind)` which is a no-op
+when unconfigured (unit tests, single-device runs).
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = {"mesh": None, "dp": None, "tp": "model", "gather_rules": None}
+
+
+def configure(mesh: Optional[Mesh], dp: Optional[Tuple[str, ...]],
+              tp: str = "model", gather_rules=None) -> None:
+    _STATE["mesh"] = mesh
+    _STATE["dp"] = dp
+    _STATE["tp"] = tp
+    _STATE["gather_rules"] = gather_rules
+
+
+@contextmanager
+def use(mesh: Optional[Mesh], dp, tp: str = "model", gather_rules=None):
+    old = dict(_STATE)
+    configure(mesh, dp, tp, gather_rules)
+    try:
+        yield
+    finally:
+        _STATE.update(old)
+
+
+def gather_params(tree):
+    """Explicit per-layer FSDP all-gather: pin the *sliced* layer params to
+    their gathered (FSDP-axes-replicated, TP-axes-kept) layout inside the
+    scan body.  Without this, GSPMD may gather the whole stacked weight
+    tensor on every loop iteration (observed: 25 TB/step wire on the 235B
+    train cell).  The transpose of this constraint is the gradient
+    reduce-scatter — ZeRO-3 semantics, explicitly."""
+    rules = _STATE.get("gather_rules")
+    mesh = _STATE["mesh"]
+    if rules is None or mesh is None:
+        return tree
+
+    def one(path, leaf):
+        name = ""
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        spec = rules.gathered_rule(name, leaf.shape)
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, spec))
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def _div(n: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return False
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return n % size == 0
+
+
+def shard(x: jax.Array, kind: str) -> jax.Array:
+    """kind:
+      'btd'      — batch over DP, rest replicated;
+      'btd_sp'   — batch over DP, *sequence* over TP (Megatron-style
+                   sequence parallelism for the inter-layer residual: the
+                   remat-saved (L,B,S,d) stack shrinks TP×, and attention
+                   out-projections lower to reduce-scatter instead of
+                   all-reduce);
+      'btd_fsdp' — batch over DP, feature over TP (for SSM/hybrid stacks
+                   whose chunked seq scans forbid seq sharding);
+      'bd' / 'bt' — batch over DP;
+      'btf'      — batch over DP, last axis over TP (logits over vocab).
+    Every axis falls back to replicated when not divisible."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    dp, tp = _STATE["dp"], _STATE["tp"]
+    b = x.shape[0]
+    dpx = dp if _div(b, mesh, dp) else None
+    if kind == "btd":
+        spec = P(dpx, *((None,) * (x.ndim - 1)))
+    elif kind == "btd_sp":
+        seq = tp if (x.ndim >= 3 and _div(x.shape[1], mesh, tp)) else None
+        spec = P(dpx, seq, *((None,) * (x.ndim - 2)))
+    elif kind == "btd_fsdp":
+        last = tp if _div(x.shape[-1], mesh, tp) else None
+        spec = P(dpx, *((None,) * (x.ndim - 2)), last)
+    elif kind == "bthd":
+        # attention operand pin: heads over TP, sequence UNSHARDED — one
+        # reshard per layer instead of per-query-chunk re-gathers inside
+        # the blocked-attention scan
+        h = tp if _div(x.shape[2], mesh, tp) else None
+        spec = P(dpx, None, h, None)
+    elif kind in ("bd", "bt"):
+        spec = P(dpx, None)
+    elif kind == "btf":
+        last = tp if _div(x.shape[-1], mesh, tp) else None
+        spec = P(dpx, *((None,) * (x.ndim - 2)), last)
+    else:
+        raise ValueError(kind)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,242 @@
+"""Checkpointing — fault-tolerance substrate (DESIGN.md §4).
+
+Two checkpoint families share one on-disk format:
+
+  * **Index checkpoints** (`save_vectormaton`): ESAM struct-of-arrays +
+    per-state index descriptors + the vector table.  Restores without any
+    rebuild — the restart path after a node failure during serving.
+  * **Train-state checkpoints** (`CheckpointManager`): pytree of arrays
+    saved as per-host shard files + a JSON manifest; atomic rename commit;
+    optional async (background-thread) save so the train loop never blocks
+    on disk; resume-from-latest; reshard-on-load (any mesh -> any mesh,
+    because shards store the *global* array and the loader re-shards with
+    the target sharding — adequate at dry-run scale; a production variant
+    writes per-device shards, same manifest schema).
+
+Atomicity: everything is written into `<dir>.tmp` then `os.replace`d, so a
+crash mid-save never corrupts the latest good checkpoint.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+# --------------------------------------------------------------------- #
+# VectorMaton index checkpoints
+# --------------------------------------------------------------------- #
+
+def save_vectormaton(vm, path: str) -> None:
+    from ..core.vectormaton import _RAW
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.savez_compressed(os.path.join(tmp, "esam.npz"),
+                        **{k: v for k, v in vm.esam.to_arrays().items()})
+    np.save(os.path.join(tmp, "vectors.npy"), vm.vectors)
+    # state indexes: raw sets into one CSR; graphs into per-state npz
+    raw_ptr = [0]
+    raw_data: List[np.ndarray] = []
+    kinds = np.full(len(vm.state_index), -1, dtype=np.int8)
+    graph_states = []
+    for u, idx in enumerate(vm.state_index):
+        if idx is None:
+            raw_ptr.append(raw_ptr[-1])
+            continue
+        if idx.kind == _RAW:
+            kinds[u] = 0
+            raw_data.append(idx.raw_ids)
+            raw_ptr.append(raw_ptr[-1] + len(idx.raw_ids))
+        else:
+            kinds[u] = 1
+            raw_ptr.append(raw_ptr[-1])
+            graph_states.append(u)
+            np.savez_compressed(os.path.join(tmp, f"graph_{u}.npz"),
+                                **idx.graph.pack_full())
+    np.savez_compressed(
+        os.path.join(tmp, "states.npz"),
+        kinds=kinds,
+        inherit=np.asarray(vm.inherit, dtype=np.int64),
+        raw_ptr=np.asarray(raw_ptr, dtype=np.int64),
+        raw_data=(np.concatenate(raw_data) if raw_data
+                  else np.empty(0, np.int64)),
+        deleted=np.asarray(sorted(vm.deleted), dtype=np.int64),
+        graph_states=np.asarray(graph_states, dtype=np.int64),
+        config=np.asarray([vm.config.T, vm.config.M, vm.config.ef_con,
+                           0 if vm.config.metric == "l2" else 1,
+                           int(vm.config.reuse), int(vm.config.skip_build),
+                           vm.config.seed], dtype=np.int64))
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+
+
+def load_vectormaton(cls, path: str):
+    from ..core.esam import ESAM
+    from ..core.hnsw import HNSW
+    from ..core.vectormaton import (VectorMatonConfig, _HNSW, _RAW,
+                                    _StateIndex)
+    esam_arrays = dict(np.load(os.path.join(path, "esam.npz"),
+                               allow_pickle=True))
+    states = np.load(os.path.join(path, "states.npz"))
+    cfg_arr = states["config"]
+    config = VectorMatonConfig(
+        T=int(cfg_arr[0]), M=int(cfg_arr[1]), ef_con=int(cfg_arr[2]),
+        metric="l2" if cfg_arr[3] == 0 else "ip", reuse=bool(cfg_arr[4]),
+        skip_build=bool(cfg_arr[5]), seed=int(cfg_arr[6]))
+    vm = cls.__new__(cls)
+    vm.config = config
+    vm.vectors = np.load(os.path.join(path, "vectors.npy"))
+    vm.esam = ESAM.from_arrays(esam_arrays)
+    vm.esam.finalize()
+    vm.inherit = states["inherit"].tolist()
+    vm.deleted = set(int(x) for x in states["deleted"])
+    vm._lock = threading.Lock()
+    kinds = states["kinds"]
+    raw_ptr = states["raw_ptr"]
+    raw_data = states["raw_data"]
+    vm.state_index = []
+    for u in range(len(kinds)):
+        if kinds[u] == -1:
+            vm.state_index.append(None)
+        elif kinds[u] == 0:
+            vm.state_index.append(_StateIndex(
+                _RAW, raw_ids=raw_data[raw_ptr[u]:raw_ptr[u + 1]].copy()))
+        else:
+            g = HNSW.from_packed(
+                vm.vectors,
+                dict(np.load(os.path.join(path, f"graph_{u}.npz"))))
+            vm.state_index.append(_StateIndex(_HNSW, graph=g))
+    return vm
+
+
+# --------------------------------------------------------------------- #
+# train-state checkpoints
+# --------------------------------------------------------------------- #
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix.rstrip("/")] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]) -> Any:
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def rebuild(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node.keys())
+        if keys and all(k.isdigit() for k in keys):
+            return [rebuild(node[k]) for k in sorted(keys, key=int)]
+        return {k: rebuild(v) for k, v in node.items()}
+
+    return rebuild(root)
+
+
+class CheckpointManager:
+    """Step-indexed checkpoints with atomic commit, async save, retention,
+    and resume-from-latest."""
+
+    def __init__(self, directory: str, keep: int = 3) -> None:
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._async_thread: Optional[threading.Thread] = None
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def save(self, step: int, tree: Any, blocking: bool = True) -> None:
+        flat = _flatten(tree)
+        # Pull device arrays to host *before* handing off to the async
+        # thread so the train loop can donate/overwrite its buffers.
+        host_flat = {k: np.asarray(v) for k, v in flat.items()}
+        if blocking:
+            self._write(step, host_flat)
+        else:
+            self.wait()
+            self._async_thread = threading.Thread(
+                target=self._write, args=(step, host_flat), daemon=True)
+            self._async_thread.start()
+
+    def wait(self) -> None:
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    def _write(self, step: int, host_flat: Dict[str, np.ndarray]) -> None:
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "time": time.time(), "arrays": {}}
+        np.savez(os.path.join(tmp, "arrays.npz"), **host_flat)
+        for k, v in host_flat.items():
+            manifest["arrays"][k] = {"shape": list(v.shape),
+                                     "dtype": str(v.dtype)}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, sharding_tree: Any = None
+                ) -> Any:
+        """Load checkpoint ``step`` (default latest).  If ``sharding_tree``
+        (a pytree of jax Shardings matching the saved tree) is given, arrays
+        are placed with those shardings — reshard-on-load for elastic
+        restarts on a different mesh."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = self._step_dir(step)
+        flat = dict(np.load(os.path.join(path, "arrays.npz")))
+        tree = _unflatten(flat)
+        if sharding_tree is not None:
+            import jax
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, sharding_tree)
+        return tree

@@ -1,0 +1,112 @@
+"""Fault-tolerance runtime: heartbeats, straggler mitigation, elastic
+re-meshing.
+
+On a real multi-pod deployment these hooks bind to the cluster manager
+(GKE / Borg preemption notices, ICI link telemetry).  The logic — which is
+what can be validated off-hardware — is pure Python over step timings and
+a device-health table, and is exercised by tests/test_fault_tolerance.py:
+
+  * `HeartbeatMonitor` — per-host liveness with configurable timeout;
+    a missed heartbeat marks the host suspect, two mark it dead.
+  * `StragglerMonitor` — robust (median + MAD) per-step outlier detection;
+    the launcher consults `should_checkpoint_and_rebalance()` to decide
+    when a slow host warrants a backup-worker dispatch or re-mesh.
+  * `ElasticPlan` — given the surviving device set, picks the largest
+    (data, model) mesh that preserves the TP degree, and drives
+    CheckpointManager.restore(..., sharding_tree=new) — reshard-on-load.
+
+The train loop (launch/train.py) wires these around every step; the
+checkpoint manager provides the recovery substrate.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: Sequence[str], timeout_s: float = 30.0):
+        self.timeout_s = timeout_s
+        self.last_seen: Dict[str, float] = {h: time.time() for h in hosts}
+        self.suspect: Dict[str, int] = {h: 0 for h in hosts}
+
+    def beat(self, host: str, now: Optional[float] = None) -> None:
+        self.last_seen[host] = time.time() if now is None else now
+        self.suspect[host] = 0
+
+    def check(self, now: Optional[float] = None) -> Dict[str, str]:
+        now = time.time() if now is None else now
+        out = {}
+        for h, t in self.last_seen.items():
+            if now - t > self.timeout_s:
+                self.suspect[h] += 1
+                out[h] = "dead" if self.suspect[h] >= 2 else "suspect"
+                self.last_seen[h] = now  # restart the window
+            else:
+                out[h] = "ok"
+        return out
+
+    def dead_hosts(self) -> List[str]:
+        return [h for h, n in self.suspect.items() if n >= 2]
+
+
+class StragglerMonitor:
+    """Median + MAD outlier detection over per-host step times."""
+
+    def __init__(self, threshold: float = 3.0, window: int = 16):
+        self.threshold = threshold
+        self.window = window
+        self.history: Dict[str, List[float]] = {}
+
+    def record(self, host: str, step_time_s: float) -> None:
+        self.history.setdefault(host, []).append(step_time_s)
+        self.history[host] = self.history[host][-self.window:]
+
+    def _median(self, xs: Sequence[float]) -> float:
+        s = sorted(xs)
+        n = len(s)
+        return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+    def stragglers(self) -> List[str]:
+        if len(self.history) < 2:
+            return []
+        recents = {h: self._median(xs) for h, xs in self.history.items()
+                   if xs}
+        med = self._median(list(recents.values()))
+        mad = self._median([abs(v - med) for v in recents.values()]) + 1e-9
+        return [h for h, v in recents.items()
+                if (v - med) / (1.4826 * mad) > self.threshold
+                and v > 1.05 * med]
+
+    def should_checkpoint_and_rebalance(self) -> bool:
+        return bool(self.stragglers())
+
+
+@dataclass
+class ElasticPlan:
+    """Re-mesh policy after losing devices: keep TP degree (param layout
+    survives), shrink DP; batch is re-split over the survivors."""
+    tp_degree: int
+    old_data: int
+
+    def plan(self, surviving_devices: int) -> Tuple[int, int]:
+        if surviving_devices < self.tp_degree:
+            raise RuntimeError(
+                f"cannot keep tp={self.tp_degree} with "
+                f"{surviving_devices} devices")
+        new_data = surviving_devices // self.tp_degree
+        # largest power-of-two DP not exceeding survivors/tp keeps the
+        # global batch divisible
+        p = 1
+        while p * 2 <= new_data:
+            p *= 2
+        return (p, self.tp_degree)
+
+    def remesh(self, devices):
+        import jax
+        import numpy as np
+        data, model = self.plan(len(devices))
+        dev = np.asarray(devices[:data * model]).reshape(data, model)
+        return jax.sharding.Mesh(dev, ("data", "model"))

@@ -1,0 +1,92 @@
+"""Distributed vector search — shard_map over the `data` mesh axis.
+
+The VectorMaton serving story at pod scale (DESIGN.md §4): the global
+vector table is row-sharded across the `data` axis; every device computes
+the fused distance+top-k over its local shard (the same Pallas kernel the
+single-chip path uses), then the k winners per shard are all-gathered and
+reduced to a global top-k.  Collective volume is O(devices · k · 8 bytes)
+per query batch — negligible against the distance compute, which is why
+brute-force pattern-constrained search scales linearly in chips.
+
+State-index semantics: a state's candidate ID set is turned into a dense
+mask/subset on the host; this module only handles the numeric sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+f32 = jnp.float32
+
+
+def sharded_topk(mesh: Mesh, queries: jax.Array, base: jax.Array, k: int,
+                 *, metric: str = "l2", axis: str = "data",
+                 valid_mask: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Exact top-k of `queries` (Q, d) against row-sharded `base` (N, d).
+
+    ``valid_mask`` (N,) bool — e.g. the pattern-qualified subset V_p of a
+    VectorMaton state; invalid rows never win.
+    Returns (dists (Q, k), global indices (Q, k)).
+    """
+    n = base.shape[0]
+    shards = mesh.shape[axis]
+    assert n % shards == 0, (n, shards)
+    local_n = n // shards
+
+    def local(q, b, m):
+        # q: (Q, d) replicated; b: (local_n, d); m: (local_n, 1)
+        qf = q.astype(f32)
+        bf = b.astype(f32)
+        if metric == "l2":
+            d = (jnp.sum(qf * qf, 1, keepdims=True) + jnp.sum(bf * bf, 1)
+                 - 2.0 * qf @ bf.T)
+            d = jnp.maximum(d, 0.0)
+        else:
+            d = -(qf @ bf.T)
+        if m is not None:
+            d = jnp.where(m[:, 0][None, :], d, jnp.inf)
+        kk = min(k, local_n)
+        neg, idx = jax.lax.top_k(-d, kk)
+        vals = -neg
+        # globalize indices
+        shard_id = jax.lax.axis_index(axis)
+        gidx = idx + shard_id * local_n
+        if kk < k:
+            vals = jnp.pad(vals, ((0, 0), (0, k - kk)),
+                           constant_values=jnp.inf)
+            gidx = jnp.pad(gidx, ((0, 0), (0, k - kk)),
+                           constant_values=-1)
+        # gather every shard's candidates and reduce to global top-k
+        av = jax.lax.all_gather(vals, axis, axis=0)    # (shards, Q, k)
+        ai = jax.lax.all_gather(gidx, axis, axis=0)
+        av = av.transpose(1, 0, 2).reshape(q.shape[0], -1)
+        ai = ai.transpose(1, 0, 2).reshape(q.shape[0], -1)
+        neg, pos = jax.lax.top_k(-av, k)
+        return -neg, jnp.take_along_axis(ai, pos, axis=1)
+
+    other_axes = tuple(a for a in mesh.axis_names if a != axis)
+    in_specs = (P(), P(axis, None),
+                P(axis, None) if valid_mask is not None else None)
+    mask_arg = (valid_mask[:, None] if valid_mask is not None else None)
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=in_specs[:2] + ((in_specs[2],)
+                                            if valid_mask is not None
+                                            else (None,)),
+                   out_specs=(P(), P()), check_rep=False)
+    return fn(queries, base, mask_arg)
+
+
+def replicate(mesh: Mesh, x: jax.Array) -> jax.Array:
+    return jax.device_put(x, NamedSharding(mesh, P()))
+
+
+def shard_rows(mesh: Mesh, x: jax.Array, axis: str = "data") -> jax.Array:
+    return jax.device_put(
+        x, NamedSharding(mesh, P(axis, *((None,) * (x.ndim - 1)))))

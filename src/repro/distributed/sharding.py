@@ -1,0 +1,198 @@
+"""Sharding rules — DP/FSDP/TP/EP/SP for every arch and shape.
+
+Strategy (DESIGN.md §4):
+  * TP over `model`: attention heads (uniform head axis — KV expanded per
+    models/layers.py), FFN hidden, experts (EP), SSD heads, vocab;
+  * FSDP over `data`: the non-TP dimension of every ≥2-D weight;
+  * DP over (`pod`, `data`): batch;
+  * SP: decode KV caches shard their sequence axis over `model` (scores
+    softmax/contract reduce with tiny all-reduces); batch-1 long-context
+    shards sequence over (`data`,`model`).
+  * Cross-pod: only the gradient all-reduce crosses pods — params are
+    replicated pod-wise (FSDP within a pod), matching DCI-bandwidth reality.
+
+Every rule degrades gracefully: an axis is sharded only when its size
+divides the mesh axis; otherwise it stays replicated (e.g. gemma3's 4 query
+heads are not TP-shardable — its FFN and vocab still are).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..launch.mesh import axis_size, dp_axes
+from ..models.config import ModelConfig
+
+TP = "model"
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+class ShardingRules:
+    """Builds PartitionSpec trees for params / optimizer / batches / caches
+    of one (arch, mesh) pair."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.tp = mesh.shape[TP]
+        self.dp = dp_axes(mesh)
+        self.dp_size = axis_size(mesh, self.dp)
+        # FSDP spans the full DP group (pod × data on multi-pod meshes):
+        # ZeRO-3 across pods is what lets ≥398B-param training fit — the
+        # optimizer state alone exceeds one pod's aggregate HBM.
+        self.fsdp = self.dp if len(self.dp) > 1 else self.dp[0]
+        self.fsdp_size = self.dp_size
+
+    # ------------------------------------------------------------------ #
+    def _tp_if(self, dim: int) -> Optional[str]:
+        return TP if _div(dim, self.tp) else None
+
+    def _fsdp_if(self, dim: int) -> Optional[str]:
+        return self.fsdp if _div(dim, self.fsdp_size) else None
+
+    def _param_rule(self, name: str, shape: Tuple[int, ...]) -> P:
+        cfg = self.cfg
+        nd = len(shape)
+
+        def pad(tail):
+            return P(*((None,) * (nd - len(tail)) + tuple(tail)))
+
+        if name in ("embed",):
+            return P(self._tp_if(shape[0]), None)
+        if name in ("lm_head",):
+            return P(None, self._tp_if(shape[1]))
+        if name in ("wq",):
+            return pad([self._fsdp_if(shape[-3]), self._tp_if(shape[-2]),
+                        None])
+        if name in ("wk", "wv"):
+            return pad([self._fsdp_if(shape[-3]), None, None])
+        if name in ("wo",):
+            return pad([self._tp_if(shape[-3]), None,
+                        self._fsdp_if(shape[-1])])
+        if name in ("w_gate", "w_up"):
+            if nd >= 3 and cfg.num_experts and shape[-3] == cfg.num_experts:
+                return pad([self._tp_if(shape[-3]),
+                            self._fsdp_if(shape[-2]), None])
+            return pad([self._fsdp_if(shape[-2]), self._tp_if(shape[-1])])
+        if name == "w_down":
+            if nd >= 3 and cfg.num_experts and shape[-3] == cfg.num_experts:
+                return pad([self._tp_if(shape[-3]), None,
+                            self._fsdp_if(shape[-1])])
+            return pad([self._tp_if(shape[-2]), self._fsdp_if(shape[-1])])
+        if name in ("w_in",):
+            return pad([self._fsdp_if(shape[-2]), self._tp_if(shape[-1])])
+        if name in ("w_out",):
+            return pad([self._tp_if(shape[-2]), self._fsdp_if(shape[-1])])
+        if name in ("z_proj", "x_proj", "b_proj", "c_proj", "dt_proj"):
+            return pad([self._fsdp_if(shape[-2]), self._tp_if(shape[-1])])
+        if name == "out_proj":
+            return pad([self._tp_if(shape[-2]), self._fsdp_if(shape[-1])])
+        if name.startswith("conv_") and name.endswith("_w"):
+            return pad([None, self._tp_if(shape[-1])])
+        if name.startswith("conv_") and name.endswith("_b"):
+            return pad([self._tp_if(shape[-1])])
+        if name in ("A_log", "D", "dt_bias"):
+            return pad([self._tp_if(shape[-1])])
+        # norms, routers, biases: replicated
+        return P(*((None,) * nd))
+
+    def gathered_rule(self, name: str, shape: Tuple[int, ...]) -> P:
+        """The per-layer spec *after* the explicit FSDP gather: FSDP axes
+        replaced by replication, TP axes kept.  Applied inside layer-scan
+        bodies so the all-gather hits the sliced layer weights, not the
+        whole stacked tensor (ZeRO-3 gather discipline)."""
+        base = self._param_rule(name, shape)
+        fsdp = self.fsdp
+
+        def drop(entry):
+            if entry is None:
+                return None
+            if entry == fsdp:
+                return None
+            if isinstance(entry, tuple) and isinstance(fsdp, tuple) \
+                    and set(entry) == set(fsdp):
+                return None
+            return entry
+        return P(*(drop(e) for e in tuple(base)))
+
+    # ------------------------------------------------------------------ #
+    def param_specs(self, params_shape: Any) -> Any:
+        """PartitionSpec tree matching a (shape-only) param tree."""
+        def rule(path, leaf):
+            name = None
+            for entry in reversed(path):
+                if isinstance(entry, jax.tree_util.DictKey):
+                    name = str(entry.key)
+                    break
+            return self._param_rule(name or "", leaf.shape)
+        return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+    def param_shardings(self, params_shape: Any) -> Any:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.param_specs(params_shape))
+
+    # ------------------------------------------------------------------ #
+    def batch_specs(self, batch_shape: Dict[str, Any], batch_size: int
+                    ) -> Dict[str, Any]:
+        dp = self.dp if _div(batch_size, self.dp_size) else (
+            "data" if _div(batch_size, self.fsdp_size) else None)
+
+        def rule(path, leaf):
+            nd = len(leaf.shape)
+            if nd == 0:
+                return P()
+            return P(*((dp,) + (None,) * (nd - 1)))
+        return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+    # ------------------------------------------------------------------ #
+    def cache_specs(self, cache_shape: Any, batch_size: int) -> Any:
+        """Decode-cache specs.  KV caches: (..., B, S, G, hd) — batch over
+        DP when divisible, else sequence over (data, model) (SP for the
+        batch-1 long-context shape).  SSM states: (..., B, H, P, N) — heads
+        over TP."""
+        cfg = self.cfg
+        batch_dp = self.dp if _div(batch_size, self.dp_size) else None
+
+        def rule(path, leaf):
+            names = [str(e.key) for e in path
+                     if isinstance(e, jax.tree_util.DictKey)]
+            name = names[-1] if names else ""
+            shape = leaf.shape
+            nd = len(shape)
+
+            def pad(tail):
+                return P(*((None,) * (nd - len(tail)) + tuple(tail)))
+
+            if name in ("k", "v"):                     # (..., B, S, G, hd)
+                seq = shape[-3]
+                if batch_dp is not None:
+                    return pad([batch_dp, self._tp_if(seq), None, None])
+                seq_axes = tuple(a for a in ("data", TP)
+                                 if _div(seq, self.mesh.shape[a]))
+                if _div(seq, axis_size(self.mesh, ("data", TP))):
+                    return pad([None, ("data", TP), None, None])
+                return pad([None, self._tp_if(seq), None, None])
+            if name == "ssm":                          # (..., B, H, P, N)
+                return pad([batch_dp, self._tp_if(shape[-3]), None, None])
+            if name.startswith("conv"):                # (..., B, K-1, C)
+                return pad([batch_dp, None, self._tp_if(shape[-1])])
+            return P(*((None,) * nd))
+        return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+    # ------------------------------------------------------------------ #
+    def opt_specs(self, params_shape: Any) -> Any:
+        """Adam moments share the param specs; scalars replicated."""
+        pspecs = self.param_specs(params_shape)
+        return {"m": pspecs, "v": pspecs, "step": P()}
+
+    def shardings(self, spec_tree: Any) -> Any:
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))

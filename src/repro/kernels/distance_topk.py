@@ -1,0 +1,119 @@
+"""Fused distance + running-top-k kernel (Pallas, TPU).
+
+This is the hot path of the paper's skip-build strategy (§4.1): states whose
+base set is below threshold T are searched brute-force.  On TPU the winning
+schedule is *not* the paper's scalar CPU loop but a flash-attention-style
+streaming reduction:
+
+  grid = (Q/bq, N/bn) with the N dimension innermost ("arbitrary" semantics —
+  sequential on TPU).  Each step computes a (bq, bn) distance tile on the MXU
+  and folds it into a per-query running top-k held in VMEM scratch; only the
+  final (bq, k) winners are written to HBM.
+
+Versus materializing the full (Q, N) distance matrix this removes the O(Q·N)
+HBM round-trip — the kernel is compute-bound for d ≥ ~64 instead of
+memory-bound, which is what pushes the §Perf roofline fraction up.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_Q = 128
+BLOCK_N = 128
+
+
+def _topk_kernel(x_ref, y_ref, val_out_ref, idx_out_ref,
+                 val_scr, idx_scr, *, metric: str, k: int, block_n: int,
+                 n_blocks: int, valid_n: int):
+    j = pl.program_id(1)
+
+    # --- reset the running top-k at the start of each query row ------------
+    @pl.when(j == 0)
+    def _init():
+        val_scr[...] = jnp.full_like(val_scr, jnp.inf)
+        idx_scr[...] = jnp.full_like(idx_scr, -1)
+
+    x = x_ref[...].astype(jnp.float32)            # (bq, d)
+    y = y_ref[...].astype(jnp.float32)            # (bn, d)
+    xy = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    if metric == "l2":
+        x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+        y2 = jnp.sum(y * y, axis=-1)[None, :]
+        dist = jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)   # (bq, bn)
+    else:
+        dist = -xy
+
+    base = j * block_n
+    col_idx = base + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
+    # Padded base rows (col >= valid_n) must never win the top-k.
+    if valid_n < n_blocks * block_n:
+        dist = jnp.where(col_idx < valid_n, dist, jnp.inf)
+
+    # --- fold tile into running top-k --------------------------------------
+    # Concatenate (bq, k) carry with (bq, bn) tile, keep k smallest.  top_k
+    # selects the largest, so negate.
+    all_vals = jnp.concatenate([val_scr[...], dist], axis=1)
+    all_idx = jnp.concatenate([idx_scr[...], col_idx], axis=1)
+    neg_top, pos = jax.lax.top_k(-all_vals, k)
+    val_scr[...] = -neg_top
+    idx_scr[...] = jnp.take_along_axis(all_idx, pos, axis=1)
+
+    # --- emit on the last tile of the row ----------------------------------
+    @pl.when(j == n_blocks - 1)
+    def _emit():
+        val_out_ref[...] = val_scr[...]
+        idx_out_ref[...] = idx_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "block_q",
+                                             "block_n", "interpret",
+                                             "valid_n"))
+def distance_topk(x: jax.Array, y: jax.Array, k: int, *, metric: str = "l2",
+                  block_q: int = BLOCK_Q, block_n: int = BLOCK_N,
+                  interpret: bool = False, valid_n: int | None = None):
+    """Exact top-k over the base set.  x: (Q, d), y: (N, d).
+
+    Returns (values, indices) of shape (Q, k); distances ascending.
+    Q % block_q == 0, N % block_n == 0, k <= block_n (ops.py pads).
+    ``valid_n``: logical base count; rows >= valid_n are padding and are
+    masked to +inf in-kernel.
+    """
+    q, d = x.shape
+    n, d2 = y.shape
+    assert d == d2 and q % block_q == 0 and n % block_n == 0
+    assert k <= block_n, (k, block_n)
+    if valid_n is None:
+        valid_n = n
+    n_blocks = n // block_n
+    grid = (q // block_q, n_blocks)
+    kernel = functools.partial(_topk_kernel, metric=metric, k=k,
+                               block_n=block_n, n_blocks=n_blocks,
+                               valid_n=valid_n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),   # running top-k values
+            pltpu.VMEM((block_q, k), jnp.int32),     # running top-k indices
+        ],
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,110 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities:
+  * pad ragged (Q, N, k) to hardware-aligned tile multiples and strip the
+    padding from results (padded base rows get +inf distance / -1 index);
+  * select interpret mode automatically off-TPU (this container is CPU-only;
+    interpret=True executes the kernel body in Python for validation);
+  * expose a NumPy fast path used by the CPU benchmark harness so the paper's
+    QPS experiments aren't bottlenecked by interpret-mode overhead — the
+    Pallas path is the TPU deployment path and is what tests validate.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .distance_topk import distance_topk
+from .pairwise import pairwise_distance
+
+_LANE = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, rows: int) -> jax.Array:
+    if x.shape[0] == rows:
+        return x
+    pad = rows - x.shape[0]
+    return jnp.pad(x, ((0, pad), (0, 0)))
+
+
+def _round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def pairwise_sqdist(x: jax.Array, y: jax.Array, *, metric: str = "l2",
+                    interpret: bool | None = None) -> jax.Array:
+    """(Q, d) × (N, d) -> (Q, N) distances via the tiled Pallas kernel."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    q, n = x.shape[0], y.shape[0]
+    qp, np_ = _round_up(max(q, 1), _LANE), _round_up(max(n, 1), _LANE)
+    out = pairwise_distance(_pad_to(x, qp), _pad_to(y, np_), metric=metric,
+                            interpret=interpret)
+    return out[:q, :n]
+
+
+def topk(x: jax.Array, y: jax.Array, k: int, *, metric: str = "l2",
+         interpret: bool | None = None) -> Tuple[jax.Array, jax.Array]:
+    """Exact top-k via the fused streaming kernel.
+
+    Padded base rows are pushed to +inf so they can never be selected unless
+    k > N, in which case trailing entries are (-1, inf) — callers treat index
+    -1 as "no neighbour".
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    q, n = x.shape[0], y.shape[0]
+    kp = min(_round_up(k, 8), _LANE)  # scratch lane alignment
+    if kp > _LANE:
+        raise ValueError(f"k={k} exceeds kernel max {_LANE}")
+    qp, np_ = _round_up(max(q, 1), _LANE), _round_up(max(n, 1), _LANE)
+    xpad = _pad_to(x, qp)
+    ypad = _pad_to(y, np_)
+    vals, idx = distance_topk(xpad, ypad, kp, metric=metric,
+                              interpret=interpret, valid_n=n)
+    vals, idx = vals[:q, :k], idx[:q, :k]
+    # mask padded base rows
+    invalid = idx >= n
+    vals = jnp.where(invalid, jnp.inf, vals)
+    idx = jnp.where(invalid, -1, idx)
+    return vals, idx
+
+
+# --------------------------------------------------------------------- #
+# NumPy fast path (host benchmarks; bit-compatible with ref.py in f32)
+# --------------------------------------------------------------------- #
+
+def topk_numpy(x: np.ndarray, y: np.ndarray, k: int, *, metric: str = "l2"
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    x = np.asarray(x, dtype=np.float32)
+    y = np.asarray(y, dtype=np.float32)
+    if metric == "l2":
+        d = (np.sum(x * x, axis=1, keepdims=True) + np.sum(y * y, axis=1)
+             - 2.0 * (x @ y.T))
+        np.maximum(d, 0.0, out=d)
+    else:
+        d = -(x @ y.T)
+    k_eff = min(k, y.shape[0])
+    part = np.argpartition(d, k_eff - 1, axis=1)[:, :k_eff]
+    pv = np.take_along_axis(d, part, axis=1)
+    order = np.argsort(pv, axis=1, kind="stable")
+    idx = np.take_along_axis(part, order, axis=1)
+    vals = np.take_along_axis(pv, order, axis=1)
+    if k_eff < k:
+        pad = k - k_eff
+        vals = np.pad(vals, ((0, 0), (0, pad)), constant_values=np.inf)
+        idx = np.pad(idx, ((0, 0), (0, pad)), constant_values=-1)
+    return vals, idx
+
+
+__all__ = ["pairwise_sqdist", "topk", "topk_numpy", "ref"]

@@ -1,0 +1,67 @@
+"""Tiled pairwise squared-L2 / negative-dot distance kernel (Pallas, TPU).
+
+MXU adaptation of the paper's brute-force scan (DESIGN.md §2): distances are
+computed in GEMM form ``‖y‖² − 2·x·yᵀ (+‖x‖²)`` so the 128×128 systolic array
+does the contraction; the elementwise epilogue rides on the VPU.
+
+Tiling: grid (Q/bq, N/bn); each program loads an (bq, d) query tile and an
+(bn, d) base tile into VMEM and emits one (bq, bn) distance tile.  d is kept
+whole per tile — for the embedding dims this framework serves (≤ 4096,
+f32/bf16) two tiles are ≤ 4 MiB, comfortably inside the ~16 MiB VMEM budget;
+``ops.py`` asserts this and falls back to a chunked contraction otherwise.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Hardware-aligned default tiles: the MXU consumes 128×128 operands; the
+# (8,128) f32 VREG layout makes 128 the natural lane multiple.
+BLOCK_Q = 128
+BLOCK_N = 128
+
+
+def _pairwise_kernel(x_ref, y_ref, out_ref, *, metric: str):
+    x = x_ref[...].astype(jnp.float32)          # (bq, d)
+    y = y_ref[...].astype(jnp.float32)          # (bn, d)
+    # MXU path: contraction in f32 with preferred_element_type pinned so the
+    # accumulator never drops precision.
+    xy = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    if metric == "l2":
+        x2 = jnp.sum(x * x, axis=-1, keepdims=True)     # (bq, 1)
+        y2 = jnp.sum(y * y, axis=-1)[None, :]           # (1, bn)
+        out_ref[...] = jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)
+    else:  # negative inner product
+        out_ref[...] = -xy
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block_q", "block_n",
+                                             "interpret"))
+def pairwise_distance(x: jax.Array, y: jax.Array, *, metric: str = "l2",
+                      block_q: int = BLOCK_Q, block_n: int = BLOCK_N,
+                      interpret: bool = False) -> jax.Array:
+    """(Q, d) × (N, d) -> (Q, N) float32 distances.
+
+    Q and N must be multiples of the block sizes (ops.py handles padding).
+    """
+    q, d = x.shape
+    n, d2 = y.shape
+    assert d == d2, (x.shape, y.shape)
+    assert q % block_q == 0 and n % block_n == 0, (q, n, block_q, block_n)
+    grid = (q // block_q, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_pairwise_kernel, metric=metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q, n), jnp.float32),
+        interpret=interpret,
+    )(x, y)

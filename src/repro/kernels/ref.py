@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package must match these references (see
+tests/test_kernels.py for the shape/dtype sweeps).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sqdist_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Squared L2 distances.  x: (Q, d), y: (N, d) -> (Q, N) float32."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)          # (Q, 1)
+    y2 = jnp.sum(y * y, axis=-1)[None, :]                # (1, N)
+    xy = x @ y.T                                         # (Q, N)
+    d = x2 + y2 - 2.0 * xy
+    return jnp.maximum(d, 0.0)
+
+
+def pairwise_negdot_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Negative inner product (so smaller == closer, same convention as L2)."""
+    return -(x.astype(jnp.float32) @ y.astype(jnp.float32).T)
+
+
+def topk_ref(x: jax.Array, y: jax.Array, k: int, metric: str = "l2"):
+    """Exact k nearest neighbours of each query.
+
+    Returns (values, indices): (Q, k) distances ascending + base indices.
+    """
+    if metric == "l2":
+        d = pairwise_sqdist_ref(x, y)
+    elif metric == "ip":
+        d = pairwise_negdot_ref(x, y)
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    neg_vals, idx = jax.lax.top_k(-d, k)
+    return -neg_vals, idx

@@ -1,0 +1,360 @@
+"""Shared transformer building blocks for all assigned architectures.
+
+Conventions
+-----------
+* Activations (B, S, d); attention heads grouped GQA-style: q is
+  (B, S, G, R, hd) with G = kv heads, R = H/G query heads per group — MQA
+  (granite, gemma3) never materializes duplicated K/V.
+* One attention function serves train/prefill (S queries, causal+window
+  mask) and decode (1 query against a cache).  The window is a *traced*
+  scalar so layer stacks with mixed local/global patterns (gemma3 5:1)
+  scan over a single uniform layer body.
+* Params are plain dict pytrees; layer stacks carry a leading L axis and
+  are consumed by `jax.lax.scan` (compile-time is O(1) in depth — this is
+  what keeps 40 dry-run cells compilable on one CPU core).
+* Numerics: params bf16 (configurable), matmuls accumulate fp32
+  (`preferred_element_type`), norms/softmax/rope in fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed import actctx
+
+f32 = jnp.float32
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# --------------------------------------------------------------------- #
+# norms / activations / rope
+# --------------------------------------------------------------------- #
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(f32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(f32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(f32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(f32)) \
+        + bias.astype(f32)
+    return out.astype(x.dtype)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """x: (..., S, ..., hd) with positions broadcastable to the S axis.
+
+    Expects x of shape (B, S, ..., hd) and positions (B, S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta), dtype=f32)
+    angles = positions.astype(f32)[..., None] * freqs          # (B, S, hd/2)
+    while angles.ndim < x.ndim:
+        angles = angles[..., None, :]                           # head axes
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(f32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------- #
+
+def init_attention(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, qk_norm: bool, dtype) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 0.02
+    p = {
+        "wq": (jax.random.normal(k1, (d_model, num_heads, head_dim)) * s
+               ).astype(dtype),
+        "wk": (jax.random.normal(k2, (d_model, num_kv_heads, head_dim)) * s
+               ).astype(dtype),
+        "wv": (jax.random.normal(k3, (d_model, num_kv_heads, head_dim)) * s
+               ).astype(dtype),
+        "wo": (jax.random.normal(k4, (num_heads, head_dim, d_model)) * s
+               ).astype(dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.zeros((head_dim,), dtype)
+        p["k_norm"] = jnp.zeros((head_dim,), dtype)
+    return p
+
+
+def _expand_kv(kv: jax.Array, num_heads: int) -> jax.Array:
+    """(B, T, G, hd) -> (B, T, H, hd) by repeating each kv head H/G times.
+
+    Expressed as broadcast+reshape: under GSPMD the source is replicated
+    across the TP axis, so each shard materializes only its own head slice —
+    this is what lets TP shard the *uniform* head axis even when G is not
+    divisible by the mesh (kv-head counts here are 1–8 vs model=16)."""
+    b, t, g, hd = kv.shape
+    rep = num_heads // g
+    out = jnp.broadcast_to(kv[:, :, :, None, :], (b, t, g, rep, hd))
+    return out.reshape(b, t, num_heads, hd)
+
+
+Q_CHUNK = 512  # query-block size for the memory-efficient attention path
+
+
+def _attend_block(qb, kh, vh, qp, t_pos, window, causal, dtype):
+    """One query block against full K/V.  qb: (B,qc,H,hd) in compute dtype;
+    kh/vh: (B,T,H,hd); qp: (B,qc).  Returns ctx (B,qc,H,hd)."""
+    hd = qb.shape[-1]
+    scores = jnp.einsum("bshk,bthk->bhst", qb, kh,
+                        preferred_element_type=f32) / jnp.sqrt(
+                            jnp.asarray(hd, f32))
+    if causal:
+        mask = t_pos[None, None, :] <= qp[:, :, None]        # (B,qc,T)
+    else:
+        mask = jnp.ones(qp.shape + (t_pos.shape[0],), dtype=bool)
+    win = jnp.asarray(window, jnp.int32)
+    in_win = (qp[:, :, None] - t_pos[None, None, :]) < jnp.where(
+        win == 0, jnp.iinfo(jnp.int32).max, win)
+    mask = mask & in_win
+    scores = jnp.where(mask[:, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    return jnp.einsum("bhst,bthk->bshk", probs, vh,
+                      preferred_element_type=f32)
+
+
+def attention(params: Dict, x: jax.Array, *, positions: jax.Array,
+              window: jax.Array, num_kv_heads: int, rope: bool,
+              rope_theta: float, norm_eps: float,
+              cache: Optional[Dict] = None,
+              cache_pos: Optional[jax.Array] = None,
+              kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+              causal: bool = True) -> Tuple[jax.Array, Optional[Dict]]:
+    """GQA attention.
+
+    Train/prefill (S > 1): query-blocked attention over the *fresh local*
+    K/V — scores never materialize beyond (B, H, q_chunk, T) and each block
+    is rematerialized in the backward pass (flash-attention memory shape,
+    expressed as `lax.scan` + `jax.checkpoint`; on real TPU the inner block
+    is MXU-friendly and XLA fuses the softmax chain).
+
+    Decode (S == 1): attend over the updated cache.  The cache sequence
+    axis may be SP-sharded over the TP mesh axis — the (B,H,1,T) score
+    reductions lower to tiny per-step all-reduces.
+
+    Cross-attention: kv_override supplies fixed (k, v); causal=False.
+    Returns (output (B,S,d), updated cache or None).
+    """
+    b, s, d = x.shape
+    acc = f32 if s > 1 else None  # see mlp(): decode-mode accumulation
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"],
+                   preferred_element_type=acc).astype(f32)
+    if kv_override is None:
+        k = jnp.einsum("bsd,dgk->bsgk", x, params["wk"],
+                       preferred_element_type=acc).astype(f32)
+        v = jnp.einsum("bsd,dgk->bsgk", x, params["wv"],
+                       preferred_element_type=acc).astype(f32)
+    else:
+        k, v = kv_override
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"], norm_eps)
+        k = (rms_norm(k, params["k_norm"], norm_eps)
+             if kv_override is None else k)
+    if rope and kv_override is None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        k = k.astype(cache["k"].dtype)
+        v = v.astype(cache["v"].dtype)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k, (0, cache_pos.astype(jnp.int32), 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v, (0, cache_pos.astype(jnp.int32), 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        if s == 1:
+            # decode: attend over the (possibly SP-sharded) cache
+            k, v = ck, cv
+        # prefill keeps the fresh local k/v: identical result (cache was
+        # empty), and the T axis stays unsharded for the blocked scan.
+
+    hd = q.shape[-1]
+    num_heads = q.shape[2]
+
+    if s == 1 and cache is not None:
+        # decode: grouped GQA straight against the (seq-sharded) cache —
+        # expanding K/V to full heads would force GSPMD to replicate the
+        # whole cache (observed as 'involuntary full rematerialization')
+        g = num_kv_heads
+        r = num_heads // g
+        qg = q.astype(x.dtype).reshape(b, 1, g, r, hd)
+        scores = jnp.einsum("bsgrk,btgk->bgrst", qg, k.astype(x.dtype),
+                            preferred_element_type=f32) / jnp.sqrt(
+                                jnp.asarray(hd, f32))
+        t = k.shape[1]
+        t_pos = jnp.arange(t)
+        mask = t_pos[None, :] <= positions[:, 0][:, None]    # (B,T)
+        win = jnp.asarray(window, jnp.int32)
+        in_win = (positions[:, 0][:, None] - t_pos[None, :]) < jnp.where(
+            win == 0, jnp.iinfo(jnp.int32).max, win)
+        mask = mask & in_win
+        scores = jnp.where(mask[:, None, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bgrst,btgk->bsgrk", probs, v.astype(x.dtype),
+                         preferred_element_type=f32)
+        ctx = ctx.reshape(b, 1, num_heads, hd).astype(x.dtype)
+        out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"],
+                         preferred_element_type=acc).astype(x.dtype)
+        return out, new_cache
+
+    kh = _expand_kv(k, num_heads).astype(x.dtype)            # (B,T,H,hd)
+    vh = _expand_kv(v, num_heads).astype(x.dtype)
+    qc = q.astype(x.dtype)
+    # pin q heads-sharded with FULL sequence before the q-chunk scan: with
+    # an SP-sharded residual the scan would otherwise re-gather each query
+    # block on every iteration (measured ~1 TB/step on 235B train).  kh/vh
+    # need no pin — they expand locally from the *replicated* GQA k/v and
+    # inherit head sharding from the scores einsum for free.
+    qc = actctx.shard(qc, "bthd")
+    t = kh.shape[1]
+    t_pos = jnp.arange(t)
+
+    if s <= Q_CHUNK:
+        ctx = _attend_block(qc, kh, vh, positions, t_pos, window, causal,
+                            x.dtype)
+    else:
+        pad = (-s) % Q_CHUNK
+        qp_full = positions
+        if pad:
+            qc = jnp.pad(qc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            qp_full = jnp.pad(positions, ((0, 0), (0, pad)))
+        nq = qc.shape[1] // Q_CHUNK
+        qs = qc.reshape(b, nq, Q_CHUNK, num_heads, hd).swapaxes(0, 1)
+        qps = qp_full.reshape(b, nq, Q_CHUNK).swapaxes(0, 1)
+
+        def body(_, inp):
+            qb, qp = inp
+            return (), _attend_block(qb, kh, vh, qp, t_pos, window, causal,
+                                     x.dtype)
+
+        _, ctx = jax.lax.scan(jax.checkpoint(body), (), (qs, qps))
+        ctx = ctx.swapaxes(0, 1).reshape(b, nq * Q_CHUNK, num_heads, hd)
+        ctx = ctx[:, :s]
+
+    ctx = ctx.astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"],
+                     preferred_element_type=acc).astype(x.dtype)
+    return out, new_cache
+
+
+# --------------------------------------------------------------------- #
+# MLP
+# --------------------------------------------------------------------- #
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 0.02
+    if act == "swiglu":
+        return {
+            "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s
+                       ).astype(dtype),
+            "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s
+                     ).astype(dtype),
+            "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s
+                       ).astype(dtype),
+        }
+    return {
+        "w_in": (jax.random.normal(k1, (d_model, d_ff)) * s).astype(dtype),
+        "w_out": (jax.random.normal(k2, (d_ff, d_model)) * s).astype(dtype),
+    }
+
+
+def mlp(params: Dict, x: jax.Array) -> jax.Array:
+    # decode (S==1): accumulate in the activation dtype — avoids the
+    # CPU-backend fp32 weight-convert stacks (see moe.py for the rationale;
+    # TPU MXU accumulates f32 natively either way)
+    acc = f32 if x.shape[1] > 1 else None
+    if "w_gate" in params:
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"],
+                       preferred_element_type=acc)
+        u = jnp.einsum("bsd,df->bsf", x, params["w_up"],
+                       preferred_element_type=acc)
+        h = swiglu(g.astype(f32), u.astype(f32)).astype(x.dtype)
+        return jnp.einsum("bsf,fd->bsd", h, params["w_down"],
+                          preferred_element_type=acc).astype(x.dtype)
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, params["w_in"],
+                               preferred_element_type=acc).astype(f32))
+    return jnp.einsum("bsf,fd->bsd", h.astype(x.dtype), params["w_out"],
+                      preferred_element_type=acc).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# embedding / loss
+# --------------------------------------------------------------------- #
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def chunked_ce_loss(hidden: jax.Array, head: jax.Array, labels: jax.Array,
+                    mask: Optional[jax.Array] = None,
+                    chunk: int = 512) -> jax.Array:
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    Scans over sequence chunks: each step computes a (B, chunk, V) logit
+    slab, its logsumexp, and the label logit — peak memory is V·chunk
+    instead of V·S (a 262k-vocab × 4k-seq × 256-batch logit tensor would be
+    ~500 GB; chunking keeps it ~2 GB/device sharded).
+    """
+    b, s, d = hidden.shape
+    if mask is None:
+        mask = jnp.ones((b, s), dtype=bool)
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    rem = s - n_chunks * chunk
+
+    def one(h, y, m):
+        logits = jnp.einsum("bsd,dv->bsv", h, head,
+                            preferred_element_type=f32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * m), jnp.sum(m)
+
+    # checkpointed: the backward pass recomputes each (B, chunk, V) logit
+    # slab instead of saving all S/chunk of them.
+    @jax.checkpoint
+    def body(carry, xs):
+        h, y, m = xs
+        tl, tc = one(h, y, m)
+        return (carry[0] + tl, carry[1] + tc), ()
+
+    hs = hidden[:, :n_chunks * chunk].reshape(b, n_chunks, chunk, d)
+    ys = labels[:, :n_chunks * chunk].reshape(b, n_chunks, chunk)
+    ms = mask[:, :n_chunks * chunk].reshape(b, n_chunks, chunk)
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), f32), jnp.zeros((), f32)),
+        (hs.swapaxes(0, 1), ys.swapaxes(0, 1), ms.swapaxes(0, 1)))
+    if rem:
+        tl, tc = one(hidden[:, -rem:], labels[:, -rem:], mask[:, -rem:])
+        tot, cnt = tot + tl, cnt + tc
+    return tot / jnp.maximum(cnt, 1.0)

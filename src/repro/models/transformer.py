@@ -1,0 +1,405 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid / vlm families.
+
+One class, three layer-stack layouts:
+
+  * uniform attention stack (dense, moe, vlm): `lax.scan` over stacked layer
+    params with a per-layer window array — gemma3's 5:1 local:global and
+    danube's SWA are data, not control flow, so a single compiled body
+    serves all depths;
+  * uniform mamba stack (ssm): scan over stacked SSD blocks;
+  * hybrid period blocks (jamba): scan over period-P blocks, inner P
+    sublayers unrolled (1 attention + P-1 mamba; FFN alternates dense/MoE).
+
+All three expose the same API: init / forward / loss / init_cache /
+prefill / decode_step.  Decode caches are stacked along the layer axis and
+scanned in lock-step with the params.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from . import moe as MOE
+from . import ssm as SSM
+from .config import ModelConfig
+from ..distributed import actctx
+
+f32 = jnp.float32
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        assert not cfg.is_encoder_decoder, "use encdec.EncDec for whisper"
+        self.cfg = cfg
+        self.dtype = L._dtype(cfg.dtype)
+        # vocab padded to a 256 multiple so the logits axis TP-shards on any
+        # mesh (standard practice; pad rows are ordinary unused embeddings)
+        self.vocab_padded = -(-cfg.vocab_size // 256) * 256
+        # decode-time layer-scan unroll factor: unrolling lets XLA reuse
+        # the (CPU-backend) fp32 weight-convert buffers per layer instead
+        # of hoisting the whole converted stack out of the loop
+        self.decode_unroll = 1
+
+    # ------------------------------------------------------------------ #
+    # init
+    # ------------------------------------------------------------------ #
+
+    def _window_array(self, seq_len: int) -> jax.Array:
+        cfg = self.cfg
+        return jnp.asarray(
+            [cfg.layer_window(l, seq_len) for l in range(cfg.num_layers)],
+            dtype=jnp.int32)
+
+    def init(self, rng) -> Dict:
+        cfg, dt = self.cfg, self.dtype
+        keys = iter(jax.random.split(rng, 8 * cfg.num_layers + 8))
+        params: Dict = {"embed": L.init_embedding(next(keys),
+                                                  self.vocab_padded,
+                                                  cfg.d_model, dt),
+                        "final_norm": jnp.zeros((cfg.d_model,), dt)}
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.init_embedding(
+                next(keys), self.vocab_padded, cfg.d_model, dt).T
+
+        def attn_p():
+            return L.init_attention(next(keys), cfg.d_model, cfg.num_heads,
+                                    cfg.num_kv_heads, cfg.head_dim,
+                                    cfg.qk_norm, dt)
+
+        def ffn_p(l):
+            if cfg.is_moe_layer(l):
+                return MOE.init_moe(next(keys), cfg.d_model, cfg.num_experts,
+                                    cfg.moe_d_ff, dt)
+            return L.init_mlp(next(keys), cfg.d_model, cfg.d_ff, cfg.act, dt)
+
+        stack = functools.partial(jax.tree.map, lambda *xs: jnp.stack(xs))
+
+        if cfg.family == "ssm":
+            blocks = [SSM.init_mamba2(next(keys), cfg, dt)
+                      for _ in range(cfg.num_layers)]
+            params["layers"] = {
+                "mamba": stack(*blocks),
+                "ln": jnp.zeros((cfg.num_layers, cfg.d_model), dt),
+            }
+            return params
+
+        if cfg.attn_period:  # hybrid (jamba)
+            P = cfg.attn_period
+            nb = cfg.num_layers // P
+            blocks = {"attn": [], "mamba": [], "mlp": [], "moe": []}
+            for b in range(nb):
+                blocks["attn"].append(attn_p())
+                blocks["mamba"].append(stack(*[
+                    SSM.init_mamba2(next(keys), cfg, dt)
+                    for _ in range(P - 1)]))
+                mlps, moes = [], []
+                for j in range(P):
+                    l = b * P + j
+                    if cfg.is_moe_layer(l):
+                        moes.append(MOE.init_moe(next(keys), cfg.d_model,
+                                                 cfg.num_experts,
+                                                 cfg.moe_d_ff, dt))
+                    else:
+                        mlps.append(L.init_mlp(next(keys), cfg.d_model,
+                                               cfg.d_ff, cfg.act, dt))
+                blocks["mlp"].append(stack(*mlps))
+                blocks["moe"].append(stack(*moes))
+            params["layers"] = {
+                "attn": stack(*blocks["attn"]),
+                "mamba": stack(*blocks["mamba"]),
+                "mlp": stack(*blocks["mlp"]),
+                "moe": stack(*blocks["moe"]),
+                "ln1": jnp.zeros((nb, P, cfg.d_model), dt),
+                "ln2": jnp.zeros((nb, P, cfg.d_model), dt),
+            }
+            return params
+
+        # uniform attention stack
+        per_layer = [{"attn": attn_p(), "ffn": ffn_p(l),
+                      "ln1": jnp.zeros((cfg.d_model,), dt),
+                      "ln2": jnp.zeros((cfg.d_model,), dt)}
+                     for l in range(cfg.num_layers)]
+        params["layers"] = stack(*per_layer)
+        return params
+
+    # ------------------------------------------------------------------ #
+    # layer bodies
+    # ------------------------------------------------------------------ #
+
+    def _attn_layer(self, p, x, positions, window, cache, cache_pos):
+        cfg = self.cfg
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, new_cache = L.attention(
+            p["attn"], h, positions=positions, window=window,
+            num_kv_heads=cfg.num_kv_heads, rope=cfg.rope,
+            rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps,
+            cache=cache, cache_pos=cache_pos)
+        x = x + a
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if "router" in p["ffn"]:
+            f, aux = MOE.moe_ffn(p["ffn"], h, top_k=cfg.experts_per_token,
+                                 capacity_factor=cfg.capacity_factor,
+                                 chunk=cfg.moe_dispatch_chunk)
+        else:
+            f, aux = L.mlp(p["ffn"], h), jnp.zeros((), f32)
+        return x + f, new_cache, aux
+
+    # ------------------------------------------------------------------ #
+    # forward (train / prefill / decode share one driver)
+    # ------------------------------------------------------------------ #
+
+    def forward(self, params: Dict, tokens: jax.Array, *,
+                patch_embeds: Optional[jax.Array] = None,
+                cache: Optional[Dict] = None,
+                cache_pos: Optional[jax.Array] = None,
+                remat: bool = False, unroll: int = 1
+                ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+        """Returns (hidden (B,S,d), new_cache, aux_loss)."""
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(self.dtype)
+        if patch_embeds is not None:  # vlm stub prefix
+            x = jnp.concatenate([patch_embeds.astype(self.dtype), x], axis=1)
+        x = actctx.shard(x, "btd")  # re-anchor batch sharding post-gather
+        b, s, _ = x.shape
+        if cache_pos is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        else:
+            positions = jnp.broadcast_to(
+                cache_pos.astype(jnp.int32)[None, None], (b, s)
+                ) + jnp.arange(s)[None, :]
+
+        if cfg.family == "ssm":
+            x, new_cache = self._forward_ssm(params, x, cache, remat,
+                                             unroll)
+            aux = jnp.zeros((), f32)
+        elif cfg.attn_period:
+            x, new_cache, aux = self._forward_hybrid(
+                params, x, positions, cache, cache_pos, remat, unroll)
+        else:
+            x, new_cache, aux = self._forward_uniform(
+                params, x, positions, cache, cache_pos, remat, unroll)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, new_cache, aux
+
+    def _forward_uniform(self, params, x, positions, cache, cache_pos,
+                         remat, unroll: int = 1):
+        windows = self._window_array(x.shape[1])
+
+        def body(carry, xs):
+            x, aux = carry
+            p, window, c = xs
+            x = actctx.shard(x, "btd_sp" if x.shape[1] > 1 else "btd")
+            p = actctx.gather_params(p)
+            x, new_c, a = self._attn_layer(p, x, positions, window, c,
+                                           cache_pos)
+            return (x, aux + a), (new_c if c is not None else ())
+
+        fn = jax.checkpoint(body) if remat else body
+        (x, aux), new_cache = jax.lax.scan(
+            fn, (x, jnp.zeros((), f32)), (params["layers"], windows, cache),
+            unroll=unroll)
+        return x, (new_cache if cache is not None else None), aux
+
+    def _forward_ssm(self, params, x, cache, remat=False,
+                     unroll: int = 1):
+        cfg = self.cfg
+
+        def body(x, xs):
+            p, st = xs
+            x = actctx.shard(x, "btd_fsdp" if x.shape[1] > 1 else "btd")
+            p = actctx.gather_params(p)
+            h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+            y, new_st = SSM.mamba2_block(p["mamba"], h, cfg, state=st)
+            return x + y, new_st
+
+        lyr = params["layers"]
+        if cache is None:
+            def body_nc(x, p):
+                x = actctx.shard(x, "btd_fsdp")
+                p = actctx.gather_params(p)
+                h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+                y, _ = SSM.mamba2_block(p["mamba"], h, cfg, state=None)
+                return x + y, ()
+            fn = jax.checkpoint(body_nc) if remat else body_nc
+            x, _ = jax.lax.scan(
+                fn, x, {"mamba": lyr["mamba"], "ln": lyr["ln"]})
+            return x, None
+        x, new_cache = jax.lax.scan(
+            body, x, ({"mamba": lyr["mamba"], "ln": lyr["ln"]}, cache),
+            unroll=unroll)
+        return x, new_cache
+
+    def _forward_hybrid(self, params, x, positions, cache, cache_pos,
+                        remat, unroll: int = 1):
+        cfg = self.cfg
+        P = cfg.attn_period
+        lyr = params["layers"]
+
+        def block(carry, xs):
+            x, aux = carry
+            p, c = xs
+            x = actctx.shard(x, "btd_fsdp" if x.shape[1] > 1 else "btd")
+            p = actctx.gather_params(p)
+            new_attn = None
+            new_mamba = []
+            mi = di = ei = 0
+            for j in range(P):
+                gl_moe = cfg.is_moe_layer(j)  # period-aligned pattern
+
+                def mixer(x, p, c_j):
+                    h = L.rms_norm(x, p["ln1"][j], cfg.norm_eps)
+                    if j == cfg.attn_index:
+                        a, nc = L.attention(
+                            p["attn"], h, positions=positions,
+                            window=jnp.int32(0),
+                            num_kv_heads=cfg.num_kv_heads, rope=cfg.rope,
+                            rope_theta=cfg.rope_theta,
+                            norm_eps=cfg.norm_eps, cache=c_j,
+                            cache_pos=cache_pos)
+                    else:
+                        mp = jax.tree.map(lambda t: t[mi], p["mamba"])
+                        a, nc = SSM.mamba2_block(mp, h, cfg, state=c_j)
+                    return x + a, nc
+
+                def ffn(x, p):
+                    h = L.rms_norm(x, p["ln2"][j], cfg.norm_eps)
+                    if gl_moe:
+                        mo = jax.tree.map(lambda t: t[ei], p["moe"])
+                        f, a2 = MOE.moe_ffn(
+                            mo, h, top_k=cfg.experts_per_token,
+                            capacity_factor=cfg.capacity_factor,
+                            chunk=cfg.moe_dispatch_chunk)
+                    else:
+                        dp = jax.tree.map(lambda t: t[di], p["mlp"])
+                        f, a2 = L.mlp(dp, h), jnp.zeros((), f32)
+                    return x + f, a2
+
+                # nested remat: only ONE sublayer's internals are live
+                # during the block's backward recompute
+                if remat and c is None:
+                    mixer = jax.checkpoint(mixer)
+                    ffn = jax.checkpoint(ffn)
+
+                if j == cfg.attn_index:
+                    c_j = None if c is None else c["attn"]
+                else:
+                    c_j = (None if c is None else
+                           jax.tree.map(lambda t: t[mi], c["mamba"]))
+                x, nc = mixer(x, p, c_j)
+                if x.shape[1] > 1:
+                    x = actctx.shard(x, "btd_fsdp")
+                if j == cfg.attn_index:
+                    new_attn = nc
+                else:
+                    if nc is not None:
+                        new_mamba.append(nc)
+                    mi += 1
+                x, a2 = ffn(x, p)
+                if x.shape[1] > 1:
+                    x = actctx.shard(x, "btd_fsdp")
+                aux = aux + a2
+                if gl_moe:
+                    ei += 1
+                else:
+                    di += 1
+            if c is None:
+                return (x, aux), ()
+            new_c = {"attn": new_attn,
+                     "mamba": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                           *new_mamba)}
+            return (x, aux), new_c
+
+        fn = jax.checkpoint(block) if remat else block
+        if cache is None:
+            (x, aux), _ = jax.lax.scan(
+                fn, (x, jnp.zeros((), f32)), (lyr, None))
+            return x, None, aux
+        (x, aux), new_cache = jax.lax.scan(
+            fn, (x, jnp.zeros((), f32)), (lyr, cache), unroll=unroll)
+        return x, new_cache, aux
+
+    # ------------------------------------------------------------------ #
+    # heads / losses
+    # ------------------------------------------------------------------ #
+
+    def _head(self, params) -> jax.Array:
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    def loss(self, params: Dict, batch: Dict, *, remat: bool = True
+             ) -> jax.Array:
+        """Causal-LM cross entropy.  batch: tokens (B,S) int32, plus
+        patch_embeds for vlm.  Labels are tokens shifted left."""
+        tokens = batch["tokens"]
+        pe = batch.get("patch_embeds")
+        hidden, _, aux = self.forward(params, tokens, patch_embeds=pe,
+                                      remat=remat)
+        if pe is not None:
+            hidden = hidden[:, pe.shape[1]:]  # loss only on text positions
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        mask = jnp.ones_like(labels, dtype=bool).at[:, -1].set(False)
+        ce = L.chunked_ce_loss(hidden, self._head(params), labels, mask)
+        return ce + 0.01 * aux
+
+    # ------------------------------------------------------------------ #
+    # serving
+    # ------------------------------------------------------------------ #
+
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        cfg, dt = self.cfg, self.dtype
+        kv = lambda: jnp.zeros(
+            (batch, max_len, cfg.num_kv_heads, cfg.head_dim), dt)
+        if cfg.family == "ssm":
+            st = SSM.init_mamba_state(cfg, batch, dt)
+            return jax.tree.map(
+                lambda t: jnp.broadcast_to(
+                    t[None], (cfg.num_layers,) + t.shape).copy(), st)
+        if cfg.attn_period:
+            nb = cfg.num_layers // cfg.attn_period
+            st = SSM.init_mamba_state(cfg, batch, dt)
+            return {
+                "attn": {"k": jnp.zeros((nb, batch, max_len,
+                                         cfg.num_kv_heads, cfg.head_dim),
+                                        dt),
+                         "v": jnp.zeros((nb, batch, max_len,
+                                         cfg.num_kv_heads, cfg.head_dim),
+                                        dt)},
+                "mamba": jax.tree.map(
+                    lambda t: jnp.broadcast_to(
+                        t[None, None],
+                        (nb, cfg.attn_period - 1) + t.shape).copy(), st),
+            }
+        return {"k": jnp.zeros((cfg.num_layers, batch, max_len,
+                                cfg.num_kv_heads, cfg.head_dim), dt),
+                "v": jnp.zeros((cfg.num_layers, batch, max_len,
+                                cfg.num_kv_heads, cfg.head_dim), dt)}
+
+    def prefill(self, params: Dict, tokens: jax.Array, max_len: int,
+                patch_embeds: Optional[jax.Array] = None
+                ) -> Tuple[Dict, jax.Array]:
+        """Run the prompt, fill the cache, return (cache, last logits)."""
+        cache = self.init_cache(tokens.shape[0], max_len)
+        hidden, cache, _ = self.forward(
+            params, tokens, patch_embeds=patch_embeds, cache=cache,
+            cache_pos=jnp.int32(0))
+        logits = jnp.einsum("bd,dv->bv", hidden[:, -1].astype(f32),
+                            self._head(params).astype(f32))
+        return cache, logits[:, :self.cfg.vocab_size]
+
+    def decode_step(self, params: Dict, cache: Dict, token: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, Dict]:
+        """One token for every sequence in the batch.  token: (B, 1)."""
+        hidden, cache, _ = self.forward(params, token, cache=cache,
+                                        cache_pos=pos,
+                                        unroll=self.decode_unroll)
+        logits = jnp.einsum("bd,dv->bv", hidden[:, -1].astype(f32),
+                            self._head(params).astype(f32))
+        return logits[:, :self.cfg.vocab_size], cache

@@ -1,0 +1,114 @@
+"""Continuous-batching request scheduler (beyond-paper serving substrate).
+
+Pattern-constrained queries have wildly variable cost (chain length ×
+state sizes).  A fixed batch ties P50 latency to the slowest request; the
+scheduler below keeps a bounded in-flight window, admits by arrival order
+with a cost model (|V_p| from the automaton walk — available *before* any
+distance work), and coalesces same-state requests so the chain walk and
+the fused brute-force kernel run once per state per wave.
+
+This is the host-side analogue of LLM continuous batching: the automaton
+walk is the "prefill" (µs, host), the distance work is the "decode"
+(device), and waves are packed to the device-batch budget.
+"""
+
+from __future__ import annotations
+
+import heapq
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .engine import Request, Response, RetrievalEngine
+
+
+@dataclass(order=True)
+class _Queued:
+    sort_key: Tuple
+    seq: int = field(compare=False)
+    request: Request = field(compare=False)
+    state: int = field(compare=False)
+    cost: int = field(compare=False)
+    t_arrival: float = field(compare=False)
+
+
+class ContinuousBatcher:
+    """Admission + wave scheduling over a RetrievalEngine.
+
+    ``budget``: max Σ|V_p| distance rows per wave (device batch budget).
+    ``max_wave``: max requests per wave.
+    Fairness: FIFO within cost class; a request can be deferred at most
+    ``max_defer`` waves before it is force-admitted (no starvation).
+    """
+
+    def __init__(self, engine: RetrievalEngine, budget: int = 200_000,
+                 max_wave: int = 64, max_defer: int = 4):
+        self.engine = engine
+        self.budget = budget
+        self.max_wave = max_wave
+        self.max_defer = max_defer
+        self._queue: List[_Queued] = []
+        self._seq = 0
+        self._deferred: Dict[int, int] = {}
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> int:
+        """Returns a ticket id."""
+        st = self.engine.index.esam.walk(req.pattern)
+        cost = (len(self.engine.index.esam.state_ids(st)) if st != -1
+                else 0)
+        t = time.perf_counter()
+        q = _Queued(sort_key=(t,), seq=self._seq, request=req, state=st,
+                    cost=cost, t_arrival=t)
+        heapq.heappush(self._queue, q)
+        self._seq += 1
+        return q.seq
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # ------------------------------------------------------------------ #
+    def next_wave(self) -> List[_Queued]:
+        """Admit FIFO under the cost budget; force-admit starved items."""
+        wave: List[_Queued] = []
+        spent = 0
+        skipped: List[_Queued] = []
+        while self._queue and len(wave) < self.max_wave:
+            q = heapq.heappop(self._queue)
+            force = self._deferred.get(q.seq, 0) >= self.max_defer
+            if wave and not force and spent + q.cost > self.budget:
+                self._deferred[q.seq] = self._deferred.get(q.seq, 0) + 1
+                skipped.append(q)
+                continue
+            wave.append(q)
+            spent += q.cost
+        for q in skipped:
+            heapq.heappush(self._queue, q)
+        return wave
+
+    def run_wave(self) -> Dict[int, Response]:
+        """Execute one wave: group by automaton state, answer grouped."""
+        wave = self.next_wave()
+        out: Dict[int, Response] = {}
+        by_state: Dict[int, List[_Queued]] = {}
+        for q in wave:
+            by_state.setdefault(q.state, []).append(q)
+        for st, items in by_state.items():
+            for q in items:
+                t0 = time.perf_counter()
+                d, i = self.engine.index.query(
+                    q.request.vector, q.request.pattern, q.request.k,
+                    ef_search=q.request.ef_search)
+                out[q.seq] = Response(
+                    ids=i, distances=d,
+                    latency_s=time.perf_counter() - q.t_arrival)
+                self._deferred.pop(q.seq, None)
+        return out
+
+    def drain(self) -> Dict[int, Response]:
+        out: Dict[int, Response] = {}
+        while self.pending():
+            out.update(self.run_wave())
+        return out

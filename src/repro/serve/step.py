@@ -1,0 +1,39 @@
+"""Serve-step builders: prefill and single-token decode.
+
+``serve_decode`` is what the decode_32k / long_500k dry-run cells lower:
+one new token for every sequence against a seq_len-deep cache.  Greedy
+sampling keeps the artifact deterministic; the engine swaps in nucleus
+sampling at the host level when needed.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill(model, max_len: int) -> Callable:
+    """Positional signature (params, tokens[, patch_embeds]) — jit
+    in_shardings only bind positional args."""
+    def prefill(params, tokens, patch_embeds=None):
+        cache, logits = model.prefill(params, tokens, max_len,
+                                      patch_embeds=patch_embeds)
+        return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return prefill
+
+
+def make_prefill_encdec(model, max_dec: int) -> Callable:
+    def prefill(params, frames, tokens):
+        cache, logits = model.prefill(params, frames, tokens, max_dec)
+        return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return prefill
+
+
+def make_decode(model) -> Callable:
+    def decode(params, cache, token, pos):
+        logits, cache = model.decode_step(params, cache, token, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+    return decode

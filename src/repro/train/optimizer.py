@@ -1,0 +1,101 @@
+"""AdamW with global-norm clipping and cosine schedule.
+
+Numerics: params may live in bf16; moments are fp32 and the update math is
+fp32 (param-dtype cast happens last).  Moment tensors inherit the param
+sharding specs (distributed/sharding.py::opt_specs), so optimizer state is
+fully sharded — the dominant memory term for the big-model train cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    # Moment storage dtype.  fp32 default; bf16 for the ≥235B models where
+    # fp32 moments alone approach the per-chip HBM budget (8-bit-Adam
+    # lineage; update math stays fp32).
+    moment_dtype: str = "float32"
+
+
+def lr_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(f32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio)
+                    * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params: Any, moment_dtype=f32) -> Dict:
+    if isinstance(moment_dtype, str):
+        moment_dtype = jnp.dtype(moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(f32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float
+                        ) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(f32) * scale), grads), norm
+
+
+def update(cfg: OptConfig, grads: Any, opt_state: Dict, params: Any
+           ) -> Tuple[Any, Dict, Dict]:
+    """Returns (new_params, new_opt_state, metrics).
+
+    Clip scaling is fused into the per-leaf moment update (no materialized
+    clipped-gradient tree — that copy alone is GBs at 235B+ scale); the
+    whole leaf update (clip→m→v→param) fuses per tensor."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = opt_state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(f32)
+    bc2 = 1 - b2 ** step.astype(f32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd_core(p, g, m, v):
+        g = g.astype(f32) * scale
+        mf = b1 * m.astype(f32) + (1 - b1) * g
+        vf = b2 * v.astype(f32) + (1 - b2) * g * g
+        step_ = lr * ((mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+                      + cfg.weight_decay * p.astype(f32))
+        return ((p.astype(f32) - step_).astype(p.dtype), mf.astype(mdt),
+                vf.astype(mdt))
+
+    out = jax.tree.map(upd_core, params, grads, opt_state["m"],
+                       opt_state["v"])
+    is3 = lambda t: isinstance(t, tuple) and len(t) == 3
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

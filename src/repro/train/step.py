@@ -1,0 +1,79 @@
+"""Train-step builders: fwd+bwd, clip, AdamW, optional microbatch
+accumulation and gradient compression.
+
+The step is a pure function of (params, opt_state, batch) -> the jit'd
+artifact the dry-run lowers with explicit in/out shardings.  GSPMD inserts
+the DP gradient all-reduce, FSDP all-gathers, and TP collectives from the
+sharding annotations; nothing here is mesh-specific.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import optimizer as opt
+
+f32 = jnp.float32
+
+
+def make_train_step(model, opt_cfg: opt.OptConfig, *, accum_steps: int = 1,
+                    remat: bool = True, accum_dtype=f32,
+                    grad_transform: Optional[Callable] = None,
+                    grad_constraint: Optional[Callable] = None) -> Callable:
+    """``grad_transform``: optional hook applied to the mean gradients
+    (e.g. distributed.collectives.compress_decompress for int8
+    error-feedback compression experiments).
+
+    ``grad_constraint``: optional per-microbatch sharding pin for the raw
+    gradients.  With explicit ZeRO-3 weight gathers, cotangents arrive in
+    the *gathered* layout; pinning them back to the sharded param layout
+    makes GSPMD emit a reduce-scatter instead of a full all-reduce —
+    (G-1)/G of the wire for free (§Perf cell B iteration 2).
+
+    ``accum_dtype``: microbatch gradient-accumulator dtype — bf16 for the
+    398B cell where even one fp32 grad tree breaks the HBM budget."""
+    if isinstance(accum_dtype, str):
+        accum_dtype = jnp.dtype(accum_dtype)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            if grad_constraint is not None:
+                grads = grad_constraint(grads)
+        else:
+            # microbatch over the leading batch axis: keeps peak activation
+            # memory at 1/accum of the full batch
+            def micro(carry, mb):
+                acc_loss, acc_grads = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                if grad_constraint is not None:
+                    g = grad_constraint(g)
+                return (acc_loss + l,
+                        jax.tree.map(
+                            lambda a, gg: (a + gg.astype(accum_dtype)),
+                            acc_grads, g)), ()
+
+            split = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.zeros((), f32), zero_grads), split)
+            loss = loss / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, metrics = opt.update(opt_cfg, grads, opt_state,
+                                                params)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step

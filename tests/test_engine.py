@@ -1,0 +1,82 @@
+"""Retrieval engine integration: embed -> index -> serve -> maintain."""
+
+import numpy as np
+import pytest
+
+from repro.core.baselines import ground_truth, recall
+from repro.core.vectormaton import VectorMatonConfig
+from repro.data.corpora import SPECS, make_corpus, sample_patterns
+from repro.serve.engine import Request, RetrievalEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    vecs, seqs = make_corpus("words", scale=0.2)
+    return RetrievalEngine(vecs, seqs,
+                           VectorMatonConfig(T=30, M=8, ef_con=50)), seqs
+
+
+def test_serve_batch_recall(engine):
+    eng, seqs = engine
+    pats = sample_patterns(seqs, 2, 40)
+    rng = np.random.default_rng(0)
+    dim = eng.index.vectors.shape[1]
+    reqs = [Request(vector=rng.standard_normal(dim).astype(np.float32),
+                    pattern=p, k=10) for p in pats]
+    resps = eng.serve_batch(reqs)
+    recs = [recall(r.ids, ground_truth(eng.index.vectors, eng.index.esam,
+                                       req.pattern, req.vector, req.k))
+            for req, r in zip(reqs, resps)]
+    assert np.mean(recs) >= 0.95
+    assert all(r.latency_s < 2.0 for r in resps)
+
+
+def test_corpora_shapes():
+    for name, spec in SPECS.items():
+        vecs, seqs = make_corpus(name, scale=0.05)
+        assert vecs.shape[1] == spec.dim
+        assert len(vecs) == len(seqs)
+        assert all(len(s) > 0 for s in seqs)
+        assert set("".join(seqs[:10])) <= set(spec.alphabet)
+
+
+def test_engine_checkpoint_restore(engine, tmp_path):
+    eng, seqs = engine
+    path = str(tmp_path / "engine_ckpt")
+    eng.checkpoint(path)
+    eng2 = RetrievalEngine.restore(path)
+    rng = np.random.default_rng(1)
+    dim = eng.index.vectors.shape[1]
+    q = rng.standard_normal(dim).astype(np.float32)
+    p = sample_patterns(seqs, 2, 1)[0]
+    d1, i1 = eng.index.query(q, p, 5)
+    d2, i2 = eng2.index.query(q, p, 5)
+    assert np.array_equal(i1, i2)
+
+
+def test_engine_insert_then_query(engine):
+    eng, seqs = engine
+    rng = np.random.default_rng(2)
+    dim = eng.index.vectors.shape[1]
+    v = rng.standard_normal(dim).astype(np.float32)
+    nid = eng.insert(v, "zqzqzq")
+    r = eng.serve(Request(vector=v, pattern="zqzq", k=3))
+    assert nid in r.ids.tolist()
+    eng.delete(nid)
+    r = eng.serve(Request(vector=v, pattern="zqzq", k=3))
+    assert nid not in r.ids.tolist()
+
+
+def test_embed_texts_deterministic():
+    import jax
+    from repro.configs import smoke_config
+    from repro.models.transformer import LM
+    from repro.serve.engine import embed_texts
+    cfg = smoke_config("qwen3-4b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = np.arange(32, dtype=np.int32).reshape(2, 16) % cfg.vocab_size
+    e1 = embed_texts(model, params, [toks])
+    e2 = embed_texts(model, params, [toks])
+    assert e1.shape == (2, cfg.d_model)
+    np.testing.assert_array_equal(e1, e2)

@@ -1,0 +1,60 @@
+"""Fault-tolerance runtime: heartbeats, stragglers, elastic re-mesh."""
+
+import numpy as np
+import pytest
+
+from repro.distributed.elastic import (ElasticPlan, HeartbeatMonitor,
+                                       StragglerMonitor)
+
+
+def test_heartbeat_lifecycle():
+    hb = HeartbeatMonitor(["h0", "h1"], timeout_s=10.0)
+    t0 = 1000.0
+    hb.beat("h0", now=t0)
+    hb.beat("h1", now=t0)
+    assert hb.check(now=t0 + 5) == {"h0": "ok", "h1": "ok"}
+    # h1 misses two windows -> dead
+    hb.beat("h0", now=t0 + 12)
+    assert hb.check(now=t0 + 15)["h1"] == "suspect"
+    assert hb.check(now=t0 + 30)["h1"] == "dead"
+    assert hb.dead_hosts() == ["h1"]
+    # recovery clears suspicion
+    hb.beat("h1", now=t0 + 31)
+    assert hb.check(now=t0 + 32)["h1"] == "ok"
+
+
+def test_straggler_detection():
+    sm = StragglerMonitor(threshold=3.0)
+    rng = np.random.default_rng(0)
+    for step in range(16):
+        for h in range(8):
+            t = 1.0 + rng.normal(0, 0.01)
+            if h == 7:
+                t *= 1.8          # persistent straggler
+            sm.record(f"h{h}", t)
+    assert sm.stragglers() == ["h7"]
+    assert sm.should_checkpoint_and_rebalance()
+
+
+def test_no_false_positives_on_uniform_times():
+    sm = StragglerMonitor()
+    for step in range(16):
+        for h in range(8):
+            sm.record(f"h{h}", 1.0 + 0.001 * h)
+    assert sm.stragglers() == []
+
+
+def test_elastic_plan_keeps_tp():
+    plan = ElasticPlan(tp_degree=16, old_data=16)
+    assert plan.plan(256) == (16, 16)
+    assert plan.plan(240) == (8, 16)   # lost a host: dp shrinks to pow2
+    assert plan.plan(17) == (1, 16)
+    with pytest.raises(RuntimeError):
+        plan.plan(8)
+
+
+def test_elastic_remesh_devices():
+    import jax
+    plan = ElasticPlan(tp_degree=1, old_data=1)
+    mesh = plan.remesh(jax.devices())
+    assert mesh.axis_names == ("data", "model")

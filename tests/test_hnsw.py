@@ -1,0 +1,86 @@
+"""HNSW build + host/device search quality."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hnsw import HNSW
+from repro.core.hnsw_jax import hnsw_search_batch
+from repro.kernels import ops
+
+
+@pytest.fixture(scope="module")
+def graph():
+    rng = np.random.default_rng(1)
+    n, d = 1500, 48
+    vecs = rng.standard_normal((n, d)).astype(np.float32)
+    g = HNSW(vecs, M=12, ef_con=80, seed=0).build(range(n))
+    queries = rng.standard_normal((24, d)).astype(np.float32)
+    gt_v, gt_i = ops.topk_numpy(queries, vecs, 10)
+    return g, vecs, queries, gt_i
+
+
+def _recall(ids_list, gt_i):
+    hits = sum(len(set(ids) & set(gt.tolist()))
+               for ids, gt in zip(ids_list, gt_i))
+    return hits / gt_i.size
+
+
+def test_host_search_recall(graph):
+    g, vecs, queries, gt_i = graph
+    res = [g.search(q, 10, ef_search=96)[1].tolist() for q in queries]
+    assert _recall(res, gt_i) >= 0.9
+
+
+def test_device_search_matches_host_quality(graph):
+    g, vecs, queries, gt_i = graph
+    pk = g.pack()
+    _, ii = hnsw_search_batch(
+        jnp.asarray(vecs), jnp.asarray(pk["ids"]), jnp.asarray(pk["level0"]),
+        jnp.asarray(pk["entry"][0]), jnp.asarray(queries), k=10, ef=96)
+    res = [row.tolist() for row in np.asarray(ii)]
+    assert _recall(res, gt_i) >= 0.9
+
+
+def test_ef_monotonicity(graph):
+    """Larger ef_search should not reduce recall (the paper's QPS/recall
+    trade-off axis)."""
+    g, vecs, queries, gt_i = graph
+    r_small = _recall([g.search(q, 10, 16)[1].tolist() for q in queries],
+                      gt_i)
+    r_big = _recall([g.search(q, 10, 128)[1].tolist() for q in queries],
+                    gt_i)
+    assert r_big >= r_small - 0.02
+
+
+def test_lazy_deletion(graph):
+    g, vecs, queries, gt_i = graph
+    q = queries[0]
+    d0, i0 = g.search(q, 5, 64)
+    g.mark_deleted(int(i0[0]))
+    d1, i1 = g.search(q, 5, 64)
+    assert int(i0[0]) not in i1.tolist()
+    g._deleted.clear()
+
+
+def test_pack_roundtrip(graph):
+    g, vecs, queries, gt_i = graph
+    g2 = HNSW.from_packed(vecs, g.pack_full())
+    q = queries[1]
+    d1, i1 = g.search(q, 10, 64)
+    d2, i2 = g2.search(q, 10, 64)
+    assert np.array_equal(i1, i2)
+
+
+def test_incremental_add_searchable():
+    rng = np.random.default_rng(5)
+    vecs = rng.standard_normal((200, 16)).astype(np.float32)
+    g = HNSW(vecs, M=8, ef_con=40).build(range(100))
+    for i in range(100, 200):
+        g.add(i)
+    # every inserted vector should be its own nearest neighbour
+    ok = 0
+    for i in range(150, 200):
+        _, ids = g.search(vecs[i], 1, 64)
+        ok += int(len(ids) and ids[0] == i)
+    assert ok >= 45

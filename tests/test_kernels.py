@@ -1,0 +1,79 @@
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import pairwise_sqdist_ref, topk_ref
+
+SHAPES = [
+    (1, 7, 3, 5),
+    (5, 300, 64, 10),
+    (33, 1000, 100, 17),
+    (128, 512, 384, 10),
+    (128, 128, 128, 128),
+    (2, 5, 1536, 3),
+    (17, 259, 768, 32),
+]
+
+
+@pytest.mark.parametrize("q,n,d,k", SHAPES)
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_topk_matches_ref(q, n, d, k, metric):
+    rng = np.random.default_rng(q * 1000 + n)
+    x = jnp.asarray(rng.standard_normal((q, d)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    v, i = ops.topk(x, y, k, metric=metric)
+    valid = min(k, n)
+    rv, ri = topk_ref(x, y, valid, metric=metric)
+    np.testing.assert_allclose(np.asarray(v)[:, :valid], np.asarray(rv),
+                               atol=2e-4, rtol=1e-4)
+    if k > n:
+        assert np.all(np.asarray(i)[:, n:] == -1)
+    # returned indices must achieve the returned distances
+    iv = np.asarray(i)[:, :valid]
+    dv = np.asarray(v)[:, :valid]
+    yv = np.asarray(y)
+    xv = np.asarray(x)
+    for qi in range(min(q, 4)):
+        for kk in range(valid):
+            diff = xv[qi] - yv[iv[qi, kk]]
+            d_true = float(diff @ diff) if metric == "l2" else \
+                -float(xv[qi] @ yv[iv[qi, kk]])
+            assert abs(d_true - dv[qi, kk]) < 2e-3 + 1e-4 * abs(d_true)
+
+
+@pytest.mark.parametrize("q,n,d,k", SHAPES[:5])
+def test_pairwise_matches_ref(q, n, d, k):
+    rng = np.random.default_rng(q + n)
+    x = jnp.asarray(rng.standard_normal((q, d)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    got = ops.pairwise_sqdist(x, y)
+    want = pairwise_sqdist_ref(x, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_topk_dtypes(dtype):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((8, 64)), dtype)
+    y = jnp.asarray(rng.standard_normal((200, 64)), dtype)
+    v, i = ops.topk(x, y, 5)
+    rv, ri = topk_ref(x, y, 5)
+    # bf16 inputs: compare index overlap (distances are low-precision)
+    overlap = np.mean([
+        len(set(np.asarray(i)[r].tolist())
+            & set(np.asarray(ri)[r].tolist())) / 5 for r in range(8)])
+    assert overlap >= 0.8
+
+
+def test_topk_numpy_matches_kernel():
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal((9, 48)).astype(np.float32)
+    y = rng.standard_normal((333, 48)).astype(np.float32)
+    nv, ni = ops.topk_numpy(x, y, 11)
+    v, i = ops.topk(jnp.asarray(x), jnp.asarray(y), 11)
+    np.testing.assert_allclose(nv, np.asarray(v), atol=2e-4, rtol=1e-4)

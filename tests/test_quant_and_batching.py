@@ -1,0 +1,98 @@
+"""Beyond-paper features: SQ8+rerank kernel, continuous batcher."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.baselines import ground_truth, recall
+from repro.core.vectormaton import VectorMatonConfig
+from repro.data.corpora import make_corpus, sample_patterns
+from repro.kernels import ops
+from repro.kernels.quant import quantize_sq8, topk_sq8_rerank
+from repro.serve.batching import ContinuousBatcher
+from repro.serve.engine import Request, RetrievalEngine
+
+
+@pytest.mark.parametrize("q,n,d,k", [(8, 1000, 64, 10), (4, 300, 384, 5),
+                                     (16, 513, 100, 7)])
+def test_sq8_rerank_recall(q, n, d, k):
+    rng = np.random.default_rng(q + n)
+    x = rng.standard_normal((q, d)).astype(np.float32)
+    y = rng.standard_normal((n, d)).astype(np.float32)
+    v, i = topk_sq8_rerank(jnp.asarray(x), jnp.asarray(y), k)
+    rv, ri = ops.topk_numpy(x, y, k)
+    rec = np.mean([len(set(np.asarray(i)[r].tolist())
+                       & set(ri[r].tolist())) / k for r in range(q)])
+    assert rec >= 0.9
+    # reranked distances are exact fp32 for every returned candidate
+    for r in range(q):
+        for c in range(k):
+            diff = x[r] - y[np.asarray(i)[r, c]]
+            assert abs(float(diff @ diff) - float(np.asarray(v)[r, c])) \
+                < 1e-2
+
+
+def test_quantize_roundtrip_error():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((32, 128)).astype(np.float32)
+    q, s, sq = quantize_sq8(jnp.asarray(x))
+    deq = np.asarray(q, np.float32) * np.asarray(s)
+    assert np.max(np.abs(deq - x)) <= np.max(np.asarray(s)) * 0.51
+
+
+@pytest.fixture(scope="module")
+def batcher():
+    vecs, seqs = make_corpus("words", scale=0.15)
+    eng = RetrievalEngine(vecs, seqs, VectorMatonConfig(T=30, M=8,
+                                                        ef_con=40))
+    return ContinuousBatcher(eng, budget=2000, max_wave=8), vecs, seqs
+
+
+def test_batcher_serves_all_correctly(batcher):
+    b, vecs, seqs = batcher
+    rng = np.random.default_rng(1)
+    pats = sample_patterns(seqs, 2, 30)
+    tickets = {}
+    for p in pats:
+        q = rng.standard_normal(vecs.shape[1]).astype(np.float32)
+        tickets[b.submit(Request(vector=q, pattern=p, k=5))] = (q, p)
+    out = b.drain()
+    assert set(out) == set(tickets)
+    for tid, resp in out.items():
+        q, p = tickets[tid]
+        gt = ground_truth(b.engine.index.vectors, b.engine.index.esam,
+                          p, q, 5)
+        assert recall(resp.ids, gt) >= 0.8
+
+
+def test_batcher_no_starvation(batcher):
+    b, vecs, seqs = batcher
+    rng = np.random.default_rng(2)
+    # one expensive short pattern + many cheap long ones
+    big = sample_patterns(seqs, 1, 1)[0]
+    b.submit(Request(vector=rng.standard_normal(vecs.shape[1]
+                                                ).astype(np.float32),
+                     pattern=big, k=5))
+    for p in sample_patterns(seqs, 4, 20):
+        b.submit(Request(vector=rng.standard_normal(vecs.shape[1]
+                                                    ).astype(np.float32),
+                         pattern=p, k=5))
+    waves = 0
+    served = {}
+    while b.pending() and waves < 2 + b.max_defer + 21:
+        served.update(b.run_wave())
+        waves += 1
+    assert not b.pending(), "starved requests remain"
+
+
+def test_batcher_budget_limits_wave(batcher):
+    b, vecs, seqs = batcher
+    rng = np.random.default_rng(3)
+    for p in sample_patterns(seqs, 1, 12):  # expensive patterns
+        b.submit(Request(vector=rng.standard_normal(vecs.shape[1]
+                                                    ).astype(np.float32),
+                         pattern=p, k=5))
+    wave = b.next_wave()
+    assert 1 <= len(wave) <= b.max_wave
+    b._queue.clear()
+    b._deferred.clear()

@@ -1,0 +1,70 @@
+"""End-to-end system behaviour: the paper's full pipeline on one box.
+
+Train a tiny embedder -> embed a corpus -> build VectorMaton -> serve
+pattern-constrained queries -> checkpoint/restore -> keep serving.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.baselines import ground_truth, recall
+from repro.core.vectormaton import VectorMatonConfig
+from repro.data.corpora import make_corpus, sample_patterns
+from repro.data.pipeline import TokenPipeline
+from repro.models.transformer import LM
+from repro.serve.engine import Request, RetrievalEngine, embed_texts
+from repro.train import optimizer as opt
+from repro.train.step import make_train_step
+
+
+def test_end_to_end_pipeline(tmp_path):
+    # 1. train a small embedder a few steps
+    cfg = smoke_config("internvl2-1b").replace(frontend="none",
+                                               num_patches=0)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ostate = opt.init(params)
+    step = jax.jit(make_train_step(
+        model, opt.OptConfig(lr=2e-3, warmup_steps=3, total_steps=30)))
+    pipe = TokenPipeline(cfg, 4, 16)
+    losses = []
+    for i in range(30):
+        params, ostate, m = step(params, ostate, pipe.batch_at(i))
+        losses.append(float(m["loss"]))
+    assert min(losses[-5:]) < losses[0], losses[:3] + losses[-3:]
+
+    # 2. embed a corpus with the trained model
+    _, seqs = make_corpus("words", scale=0.1)
+    rng = np.random.default_rng(0)
+    token_batches = [
+        np.stack([np.frombuffer(s[:16].ljust(16).encode(), dtype=np.uint8)
+                  % cfg.vocab_size for s in seqs[i:i + 8]]).astype(np.int32)
+        for i in range(0, len(seqs), 8)]
+    vecs = embed_texts(model, params, token_batches)
+    assert vecs.shape == (len(seqs), cfg.d_model)
+
+    # 3. index + serve
+    eng = RetrievalEngine(vecs.astype(np.float32), seqs,
+                          VectorMatonConfig(T=20, M=8, ef_con=40))
+    pats = sample_patterns(seqs, 2, 20)
+    recs = []
+    for p in pats:
+        q = vecs[rng.integers(0, len(vecs))].astype(np.float32)
+        r = eng.serve(Request(vector=q, pattern=p, k=5))
+        gt = ground_truth(eng.index.vectors, eng.index.esam, p, q, 5)
+        recs.append(recall(r.ids, gt))
+    assert np.mean(recs) >= 0.95
+
+    # 4. checkpoint / restore / serve again
+    ck = os.path.join(tmp_path, "sys_ckpt")
+    eng.checkpoint(ck)
+    eng2 = RetrievalEngine.restore(ck)
+    q = vecs[0].astype(np.float32)
+    r1 = eng.serve(Request(vector=q, pattern=pats[0], k=5))
+    r2 = eng2.serve(Request(vector=q, pattern=pats[0], k=5))
+    assert np.array_equal(r1.ids, r2.ids)

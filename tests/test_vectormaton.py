@@ -1,0 +1,194 @@
+"""VectorMaton end-to-end behaviour: the paper's §4 guarantees."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import (OptQuery, PostFiltering, PreFiltering,
+                                  ground_truth, recall)
+from repro.core.vectormaton import VectorMaton, VectorMatonConfig, _RAW
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    rng = np.random.default_rng(7)
+    n = 250
+    seqs = ["".join(rng.choice(list("abcd"),
+                               size=rng.integers(5, 18))) for _ in range(n)]
+    vecs = rng.standard_normal((n, 24)).astype(np.float32)
+    return vecs, seqs
+
+
+@pytest.fixture(scope="module")
+def vm(dataset):
+    vecs, seqs = dataset
+    return VectorMaton(vecs, seqs, VectorMatonConfig(T=25, M=8, ef_con=50))
+
+
+def test_results_satisfy_constraint(vm, dataset):
+    vecs, seqs = dataset
+    rng = np.random.default_rng(0)
+    for p in ["a", "ab", "abc", "dd", "abcd"]:
+        ok = set(i for i, s in enumerate(seqs) if p in s)
+        q = rng.standard_normal(24).astype(np.float32)
+        d, ids = vm.query(q, p, 10)
+        assert all(i in ok for i in ids.tolist())
+        assert len(ids) == min(10, len(ok))
+
+
+def test_nonexistent_pattern_empty(vm):
+    d, ids = vm.query(np.zeros(24, np.float32), "zzzz", 5)
+    assert len(ids) == 0
+
+
+def test_exact_cover_lemma4(vm):
+    """Coverage along the inheritance chain == V_state, disjointly."""
+    for st_id in range(vm.esam.num_states):
+        cov = []
+        u = st_id
+        while u != -1:
+            idx = vm.state_index[u]
+            if idx is not None:
+                cov.append(idx.raw_ids if idx.kind == _RAW
+                           else np.asarray(idx.graph.ids))
+            u = vm.inherit[u]
+        cov = np.concatenate(cov) if cov else np.empty(0, np.int64)
+        want = vm.esam.state_ids(st_id)
+        assert len(cov) == len(np.unique(cov))
+        assert set(cov.tolist()) == set(want.tolist())
+
+
+def test_recall_vs_optquery(vm, dataset):
+    """§4.2: merging chain results is lossless => recall comparable to
+    OptQuery over the same ef_search."""
+    vecs, seqs = dataset
+    opt = OptQuery(vecs, seqs, M=8, ef_con=50, T=25, max_pattern_len=3)
+    rng = np.random.default_rng(1)
+    r_vm, r_opt = [], []
+    for _ in range(30):
+        p = "ab" if rng.random() < 0.5 else "ba"
+        q = rng.standard_normal(24).astype(np.float32)
+        gt = ground_truth(vecs, vm.esam, p, q, 10)
+        r_vm.append(recall(vm.query(q, p, 10, ef_search=64)[1], gt))
+        r_opt.append(recall(opt.query(q, p, 10, ef_search=64)[1], gt))
+    assert np.mean(r_vm) >= np.mean(r_opt) - 0.05
+
+
+def test_postfiltering_degrades_on_long_patterns(vm, dataset):
+    """Fig 2(b): PostFiltering recall collapses as selectivity drops;
+    VectorMaton holds."""
+    vecs, seqs = dataset
+    post = PostFiltering(vecs, seqs, M=8, ef_con=50)
+    rng = np.random.default_rng(2)
+    pats = [s[:4] for s in seqs if len(s) >= 4][:20]
+    r_vm, r_post = [], []
+    for p in pats:
+        q = rng.standard_normal(24).astype(np.float32)
+        gt = ground_truth(vecs, vm.esam, p, q, 10)
+        r_vm.append(recall(vm.query(q, p, 10, ef_search=32)[1], gt))
+        r_post.append(recall(post.query(q, p, 10, ef_search=32)[1], gt))
+    assert np.mean(r_vm) > np.mean(r_post)
+    assert np.mean(r_vm) >= 0.95
+
+
+def test_prefiltering_exact(dataset):
+    vecs, seqs = dataset
+    pre = PreFiltering(vecs, seqs)
+    rng = np.random.default_rng(3)
+    for p in ["a", "bc"]:
+        q = rng.standard_normal(24).astype(np.float32)
+        gt = ground_truth(vecs, pre.esam, p, q, 10)
+        assert recall(pre.query(q, p, 10)[1], gt) == 1.0
+
+
+def test_index_smaller_than_optquery(dataset):
+    vecs, seqs = dataset
+    vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=25, M=8, ef_con=50))
+    opt = OptQuery(vecs, seqs, M=8, ef_con=50, T=25)
+    assert vm.size_entries() < opt.size_entries()
+    # Theorem 1 vs Lemma 2: OptQuery insertions are the O(m^2) quantity
+    assert vm.esam.total_id_entries() < opt.num_insertions()
+
+
+def test_ablation_reuse_reduces_size(dataset):
+    vecs, seqs = dataset
+    full = VectorMaton(vecs, seqs, VectorMatonConfig(T=25, M=8, ef_con=50))
+    noreuse = VectorMaton(vecs, seqs,
+                          VectorMatonConfig(T=25, M=8, ef_con=50,
+                                            reuse=False))
+    assert full.size_entries() < noreuse.size_entries()
+
+
+def test_skip_build_threshold(dataset):
+    vecs, seqs = dataset
+    lo = VectorMaton(vecs, seqs, VectorMatonConfig(T=2, M=8, ef_con=50))
+    hi = VectorMaton(vecs, seqs, VectorMatonConfig(T=1000, M=8, ef_con=50))
+    assert hi.stats()["hnsw_states"] == 0
+    assert lo.stats()["hnsw_states"] >= hi.stats()["hnsw_states"]
+    # both remain correct
+    rng = np.random.default_rng(4)
+    q = rng.standard_normal(24).astype(np.float32)
+    gt = ground_truth(vecs, lo.esam, "ab", q, 10)
+    assert recall(hi.query(q, "ab", 10)[1], gt) == 1.0
+
+
+def test_insert_delete(dataset):
+    vecs, seqs = dataset
+    vm = VectorMaton(vecs[:100], seqs[:100],
+                     VectorMatonConfig(T=25, M=8, ef_con=50))
+    rng = np.random.default_rng(5)
+    v = rng.standard_normal(24).astype(np.float32)
+    new_id = vm.insert(v, "abab")
+    d, ids = vm.query(v, "abab", 5)
+    assert new_id in ids.tolist()
+    # exact-cover still holds after online insert
+    test_exact_cover_lemma4(vm)
+    vm.delete(new_id)
+    d, ids = vm.query(v, "abab", 5)
+    assert new_id not in ids.tolist()
+
+
+def test_save_load_roundtrip(dataset, tmp_path):
+    vecs, seqs = dataset
+    vm = VectorMaton(vecs[:120], seqs[:120],
+                     VectorMatonConfig(T=25, M=8, ef_con=50))
+    path = os.path.join(tmp_path, "idx")
+    vm.save(path)
+    vm2 = VectorMaton.load(path)
+    rng = np.random.default_rng(6)
+    q = rng.standard_normal(24).astype(np.float32)
+    d1, i1 = vm.query(q, "ab", 8)
+    d2, i2 = vm2.query(q, "ab", 8)
+    assert np.array_equal(i1, i2)
+    np.testing.assert_allclose(d1, d2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.text(alphabet="ab", min_size=1, max_size=10),
+                min_size=2, max_size=10),
+       st.text(alphabet="ab", min_size=1, max_size=4))
+def test_query_correct_for_random_collections(seqs, pattern):
+    rng = np.random.default_rng(len(seqs))
+    vecs = rng.standard_normal((len(seqs), 8)).astype(np.float32)
+    vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=3, M=4, ef_con=16))
+    q = rng.standard_normal(8).astype(np.float32)
+    d, ids = vm.query(q, pattern, 3, ef_search=64)
+    ok = set(i for i, s in enumerate(seqs) if pattern in s)
+    assert set(ids.tolist()) <= ok
+    assert len(ids) == min(3, len(ok))
+
+
+def test_jax_backend_matches_numpy(dataset):
+    vecs, seqs = dataset
+    vm_np = VectorMaton(vecs[:80], seqs[:80],
+                        VectorMatonConfig(T=1000))  # all raw -> brute force
+    vm_jx = VectorMaton(vecs[:80], seqs[:80],
+                        VectorMatonConfig(T=1000, backend="jax"))
+    rng = np.random.default_rng(8)
+    q = rng.standard_normal(24).astype(np.float32)
+    d1, i1 = vm_np.query(q, "ab", 5)
+    d2, i2 = vm_jx.query(q, "ab", 5)
+    assert np.array_equal(np.sort(i1), np.sort(i2))
