@@ -1,8 +1,10 @@
 """Distributed pattern-constrained search: shard_map over a device mesh.
 
 Demonstrates the pod-scale serving path (DESIGN.md §4): the vector table
-row-sharded across the `data` axis, pattern filtering as a validity mask,
-fused local top-k + all-gather merge.  Runs on 8 placeholder CPU devices.
+row-sharded across the `data` axis, the planner coalescing same-pattern
+requests into shared plan entries, and each entry's chain cover (V_p)
+executed as one fused local top-k + all-gather merge.  Runs on 8
+placeholder CPU devices.
 
     PYTHONPATH=src python examples/distributed_serve.py
 """
@@ -17,44 +19,49 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.esam import ESAM
+from repro.core.vectormaton import VectorMaton, VectorMatonConfig
 from repro.data.corpora import make_corpus, sample_patterns
 from repro.distributed.sharded_search import (replicate, shard_rows,
-                                              sharded_topk)
+                                              sharded_plan_topk)
 from repro.kernels import ops
 from repro.launch.mesh import make_host_mesh
 
 mesh = make_host_mesh(data=8, model=1)
 print(f"mesh: {mesh.shape} over {len(jax.devices())} devices")
 
-# --- corpus + pattern filter (ESAM on the host, as in production) -------
+# --- corpus + packed index (ESAM + planner on the host, as in production)
 vecs, seqs = make_corpus("prot", scale=0.15)
 n = (len(vecs) // 8) * 8
 vecs, seqs = vecs[:n], seqs[:n]
-esam = ESAM()
-esam.add_sequences(seqs)
-esam.finalize()
-print(f"{n} records, {esam.num_states} automaton states")
+# T above the corpus size => every state is a raw CSR segment; the sharded
+# sweep is the distance engine, the automaton only provides V_p.
+vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=10 ** 9))
+print(f"{n} records, {vm.esam.num_states} automaton states, "
+      f"{vm.runtime.stats()['base_entries']} packed base entries")
 
 base = shard_rows(mesh, jnp.asarray(vecs))
 rng = np.random.default_rng(0)
 queries = rng.standard_normal((32, vecs.shape[1])).astype(np.float32)
 q_dev = replicate(mesh, jnp.asarray(queries))
 
-for pattern in sample_patterns(seqs, 3, 3):
-    ids = esam.ids_for_pattern(pattern)
-    mask = np.zeros(n, dtype=bool)
-    mask[ids] = True
-    m_dev = shard_rows(mesh, jnp.asarray(mask))
-    with mesh:
-        t0 = time.time()
-        d, i = sharded_topk(mesh, q_dev, base, 10, valid_mask=m_dev)
-        d.block_until_ready()
-        dt = time.time() - t0
-    # verify against single-host exact search over the filtered subset
-    rv, ri = ops.topk_numpy(queries, vecs[ids], min(10, len(ids)))
-    got = np.asarray(d)[:, :min(10, len(ids))]
-    assert np.allclose(got, rv, atol=1e-3), "sharded result mismatch"
-    print(f"pattern {pattern!r}: |V_p|={len(ids):5d}  "
-          f"32 queries in {dt*1e3:.1f} ms  (verified exact)")
-print("sharded search verified against single-host brute force")
+# a coalesced workload: 32 requests over 3 distinct patterns
+pats = sample_patterns(seqs, 3, 3)
+workload = [pats[i % len(pats)] for i in range(len(queries))]
+plan = vm.plan(workload)
+print(f"{len(workload)} requests -> {len(plan.entries)} plan entries "
+      f"({plan.coalesced} coalesced)")
+
+t0 = time.time()
+results = sharded_plan_topk(mesh, base, vm.runtime, q_dev, plan, 10)
+dt = time.time() - t0
+
+# verify against single-host exact search over each request's subset
+for r, (d, i) in enumerate(results):
+    ids = vm.esam.ids_for_pattern(workload[r])
+    expect = min(10, len(ids))
+    assert len(d) == expect, (len(d), expect)
+    assert set(i.tolist()) <= set(ids.tolist()), "id outside V_p"
+    rv, ri = ops.topk_numpy(queries[r:r + 1], vecs[ids], expect)
+    assert np.allclose(d, rv[0], atol=1e-3), "sharded mismatch"
+print(f"{len(workload)} requests in {dt*1e3:.1f} ms "
+      f"(verified exact against single-host brute force)")

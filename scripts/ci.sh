@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# CI entrypoint: tier-1 tests + a smoke query through the batched engine.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+python -m pytest -x -q
+
+python - <<'PY'
+import numpy as np
+from repro.core.vectormaton import VectorMatonConfig
+from repro.serve.engine import Request, RetrievalEngine
+
+rng = np.random.default_rng(0)
+seqs = ["".join(rng.choice(list("abcd"), size=rng.integers(5, 14)))
+        for _ in range(120)]
+vecs = rng.standard_normal((120, 16)).astype(np.float32)
+eng = RetrievalEngine(vecs, seqs, VectorMatonConfig(T=20, M=8, ef_con=40))
+reqs = [Request(vector=rng.standard_normal(16).astype(np.float32),
+                pattern=p, k=5) for p in ["ab", "ab", "ab", "ab", "cd", "a"]]
+plan = eng.index.plan([r.pattern for r in reqs])
+resps = eng.serve_batch(reqs)
+for req, resp in zip(reqs, resps):
+    single = eng.serve(req)
+    assert np.array_equal(single.ids, resp.ids)
+    ok = {i for i, s in enumerate(seqs) if req.pattern in s}
+    assert set(resp.ids.tolist()) <= ok
+print(f"batched-engine smoke OK: {len(reqs)} requests, "
+      f"{len(plan.entries)} plan entries, {plan.coalesced} coalesced")
+PY
+echo "ci.sh: all checks passed"

@@ -1,0 +1,365 @@
+"""Packed query runtime — the planner/executor substrate (DESIGN.md §3).
+
+The build-time structures (ESAM dicts, per-state ``_StateIndex`` objects,
+``HNSW`` instances) are pointer-rich host objects: right for incremental
+construction, wrong for the hot query path.  At finalize time this module
+flattens them into struct-of-arrays form:
+
+  * ``kind``      (n_states,)  int8   — NONE / RAW / GRAPH per state;
+  * ``inherit``   (n_states,)  int64  — inheritance-chain successor (-1 end);
+  * ``base_ptr``  (n_states+1,) int64 + ``base_ids`` (Σ|base|,) int64 — CSR
+    of *every* state's base-ID segment (raw and graph states alike), so a
+    chain walk is a handful of array reads and the union of a chain's
+    segments is exactly V_state (Lemma 4);
+  * per-graph padded neighbour matrices (``HNSW.pack()``) kept by state.
+
+Query execution then splits into a host **planner** and a device
+**executor**:
+
+  * ``PackedRuntime.plan`` walks the automaton per request and coalesces
+    identical-state requests into one ``PlanEntry`` carrying the chain's raw
+    CSR segments and graph handles — no per-state Python objects survive
+    into execution;
+  * ``PackedRuntime.execute`` answers the whole batch: ALL raw segments
+    across ALL entries go through ONE segmented fused distance+top-k call
+    (``ops.topk_segmented`` — a single Pallas launch serving many
+    (query, id-set) pairs), and each graph shared by several requests runs
+    one vmapped ``hnsw_search_batch`` call.
+
+Device placement (DESIGN.md §2): ``to_device()`` uploads the vector table,
+the base-ID CSR, the per-graph matrices, and a deleted-mask exactly once;
+queries afterwards ship only the (tiny) plan — never index arrays.  The
+host backend runs the same plan against the same CSR with NumPy kernels so
+results are backend-independent for raw segments.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+KIND_NONE = -1
+KIND_RAW = 0
+KIND_GRAPH = 1
+
+_EMPTY_F = np.empty(0, np.float32)
+_EMPTY_I = np.empty(0, np.int64)
+
+
+@dataclass
+class PlanEntry:
+    """Execution plan for one automaton state (>= 1 coalesced requests)."""
+    state: int
+    requests: List[int]                      # request positions in the batch
+    segments: List[Tuple[int, int]]          # full chain cover, CSR ranges
+    raw_segments: List[Tuple[int, int]]      # raw-kind subset of `segments`
+    graph_states: List[int]                  # graph-kind states on the chain
+
+
+@dataclass
+class QueryPlan:
+    n_requests: int
+    entries: List[PlanEntry]
+    misses: List[int]                        # requests whose pattern ∉ corpus
+
+    @property
+    def coalesced(self) -> int:
+        """Requests answered by a shared plan entry."""
+        return sum(len(e.requests) - 1 for e in self.entries)
+
+
+class PackedRuntime:
+    """Flattened, device-residable view of a built VectorMaton index."""
+
+    def __init__(self, vectors: np.ndarray, kind: np.ndarray,
+                 inherit: np.ndarray, base_ptr: np.ndarray,
+                 base_ids: np.ndarray, graphs: Dict[int, Dict[str, np.ndarray]],
+                 graph_objs: Dict[int, object], *, metric: str = "l2",
+                 backend: str = "numpy", deleted: Optional[set] = None):
+        self.vectors = vectors
+        self.kind = kind
+        self.inherit = inherit
+        self.base_ptr = base_ptr
+        self.base_ids = base_ids
+        self.graphs = graphs            # state -> HNSW.pack() arrays
+        self.graph_objs = graph_objs    # state -> host HNSW (host beam search)
+        self.metric = metric
+        self.backend = backend
+        self.deleted = deleted if deleted is not None else set()
+        # state -> graph states whose base contains each id (delete fan-out)
+        self._id_graph_states: Optional[Dict[int, List[int]]] = None
+        self._dev: Optional[dict] = None    # device cache, built once
+
+    # ------------------------------------------------------------------ #
+    # construction
+    # ------------------------------------------------------------------ #
+
+    @classmethod
+    def build(cls, vm) -> "PackedRuntime":
+        """Flatten a VectorMaton's chain structure + per-state indexes."""
+        from .vectormaton import _RAW  # local import avoids cycle
+
+        n = vm.esam.num_states
+        kind = np.full(n, KIND_NONE, dtype=np.int8)
+        base_ptr = np.zeros(n + 1, dtype=np.int64)
+        chunks: List[np.ndarray] = []
+        graphs: Dict[int, Dict[str, np.ndarray]] = {}
+        graph_objs: Dict[int, object] = {}
+        for u in range(n):
+            idx = vm.state_index[u] if u < len(vm.state_index) else None
+            if idx is None:
+                base_ptr[u + 1] = base_ptr[u]
+                continue
+            if idx.kind == _RAW:
+                kind[u] = KIND_RAW
+                seg = np.asarray(idx.raw_ids, dtype=np.int64)
+            else:
+                kind[u] = KIND_GRAPH
+                seg = np.asarray(idx.graph.ids, dtype=np.int64)
+                graphs[u] = idx.graph.pack()
+                graph_objs[u] = idx.graph
+            chunks.append(seg)
+            base_ptr[u + 1] = base_ptr[u] + len(seg)
+        base_ids = (np.concatenate(chunks) if chunks
+                    else np.empty(0, np.int64))
+        return cls(vm.vectors, kind, np.asarray(vm.inherit, dtype=np.int64),
+                   base_ptr, base_ids, graphs, graph_objs,
+                   metric=vm.config.metric, backend=vm.config.backend,
+                   deleted=vm.deleted)
+
+    # ------------------------------------------------------------------ #
+    # device residency
+    # ------------------------------------------------------------------ #
+
+    def to_device(self) -> dict:
+        """Upload the packed arrays once; reused by every later batch."""
+        if self._dev is None:
+            import jax
+            import jax.numpy as jnp
+            dmask = np.zeros(len(self.vectors), dtype=bool)
+            if self.deleted:
+                gone = [i for i in self.deleted if i < len(self.vectors)]
+                dmask[gone] = True
+            self._dev = {
+                "vectors": jax.device_put(jnp.asarray(self.vectors)),
+                "base_ids": jax.device_put(
+                    jnp.asarray(self.base_ids, jnp.int32)),
+                "deleted": jax.device_put(jnp.asarray(dmask)),
+                "graphs": {
+                    u: {"ids": jax.device_put(jnp.asarray(pk["ids"])),
+                        "level0": jax.device_put(jnp.asarray(pk["level0"])),
+                        "entry": jax.device_put(jnp.asarray(pk["entry"][0]))}
+                    for u, pk in self.graphs.items()},
+            }
+        return self._dev
+
+    def mark_deleted(self, vector_id: int) -> None:
+        """Keep the device-side tombstone mask in sync (no re-upload of the
+        index arrays — a single scatter into the resident mask)."""
+        if self._dev is not None and vector_id < len(self.vectors):
+            self._dev["deleted"] = (
+                self._dev["deleted"].at[vector_id].set(True))
+
+    def graph_states_of(self, vector_id: int) -> List[int]:
+        """Graph states whose base segment contains ``vector_id``."""
+        if self._id_graph_states is None:
+            m: Dict[int, List[int]] = {}
+            for u in self.graphs:
+                for g in self.base_ids[self.base_ptr[u]:self.base_ptr[u + 1]]:
+                    m.setdefault(int(g), []).append(u)
+            self._id_graph_states = m
+        return self._id_graph_states.get(int(vector_id), [])
+
+    # ------------------------------------------------------------------ #
+    # planner (host)
+    # ------------------------------------------------------------------ #
+
+    def plan(self, states: Sequence[int]) -> QueryPlan:
+        """Coalesce a batch of walked automaton states into plan entries.
+        ``states[r]`` is the state request r reached (-1 = no match)."""
+        entries: Dict[int, PlanEntry] = {}
+        misses: List[int] = []
+        for r, st in enumerate(states):
+            if st < 0:
+                misses.append(r)
+                continue
+            e = entries.get(st)
+            if e is None:
+                segments: List[Tuple[int, int]] = []
+                raw_segments: List[Tuple[int, int]] = []
+                graph_states: List[int] = []
+                u = st
+                while u != -1:
+                    lo, hi = int(self.base_ptr[u]), int(self.base_ptr[u + 1])
+                    if hi > lo:
+                        segments.append((lo, hi))
+                        if self.kind[u] == KIND_RAW:
+                            raw_segments.append((lo, hi))
+                        else:
+                            graph_states.append(u)
+                    u = int(self.inherit[u])
+                e = PlanEntry(st, [], segments, raw_segments, graph_states)
+                entries[st] = e
+            e.requests.append(r)
+        return QueryPlan(len(states), list(entries.values()), misses)
+
+    # ------------------------------------------------------------------ #
+    # executor
+    # ------------------------------------------------------------------ #
+
+    def execute(self, queries: np.ndarray, plan: QueryPlan, k: int,
+                ef_search: int = 64
+                ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Answer every request in the plan; returns [(dists, ids)] aligned
+        with the request batch.  Device (jax) backend: one segmented kernel
+        launch for all raw segments + one vmapped beam search per shared
+        graph.  Host (numpy) backend: same plan, NumPy kernels."""
+        queries = np.ascontiguousarray(queries, dtype=np.float32)
+        out: List[Tuple[np.ndarray, np.ndarray]] = [
+            (_EMPTY_F, _EMPTY_I)] * plan.n_requests
+        if not plan.entries:
+            return out
+        parts: List[List[Tuple[np.ndarray, np.ndarray]]] = [
+            [] for _ in range(plan.n_requests)]
+        if self.backend == "jax":
+            self._execute_raw_device(queries, plan, k, parts)
+            self._execute_graphs_device(queries, plan, k, ef_search, parts)
+        else:
+            self._execute_raw_host(queries, plan, k, parts)
+            self._execute_graphs_host(queries, plan, k, ef_search, parts)
+        for r in range(plan.n_requests):
+            if not parts[r]:
+                continue
+            d = np.concatenate([p[0] for p in parts[r]])
+            i = np.concatenate([p[1] for p in parts[r]])
+            if self.deleted:
+                keep = ~np.isin(i, np.fromiter(self.deleted, dtype=np.int64))
+                d, i = d[keep], i[keep]
+            order = np.argsort(d, kind="stable")[:k]
+            out[r] = (d[order], i[order])
+        return out
+
+    # ---- raw segments ------------------------------------------------- #
+
+    def _execute_raw_host(self, queries, plan, k, parts) -> None:
+        from ..kernels import ops
+        for e in plan.entries:
+            if not e.raw_segments:
+                continue
+            cand = np.concatenate(
+                [self.base_ids[lo:hi] for lo, hi in e.raw_segments])
+            if self.deleted:
+                cand = cand[~np.isin(
+                    cand, np.fromiter(self.deleted, dtype=np.int64))]
+                if len(cand) == 0:
+                    continue
+            sub = self.vectors[cand]
+            d, li = ops.topk_numpy(queries[e.requests], sub,
+                                   min(k, len(cand)), metric=self.metric)
+            for row, r in enumerate(e.requests):
+                valid = li[row] >= 0
+                parts[r].append((d[row][valid], cand[li[row][valid]]))
+
+    def _execute_raw_device(self, queries, plan, k, parts) -> None:
+        """One segmented Pallas launch for every raw segment in the batch."""
+        import jax.numpy as jnp
+        from ..kernels import ops
+        dev = self.to_device()
+        rows: List[np.ndarray] = []
+        cseg_h: List[np.ndarray] = []
+        qseg = np.full(len(queries), -1, dtype=np.int32)
+        owners: List[PlanEntry] = []
+        for e in plan.entries:
+            if not e.raw_segments:
+                continue
+            owner = len(owners)
+            owners.append(e)
+            total = 0
+            for lo, hi in e.raw_segments:
+                rows.append(np.arange(lo, hi, dtype=np.int32))
+                total += hi - lo
+            cseg_h.append(np.full(total, owner, dtype=np.int32))
+            qseg[e.requests] = owner
+        if not owners:
+            return
+        row_idx = jnp.asarray(np.concatenate(rows))
+        cand_ids = dev["base_ids"][row_idx]          # device gather
+        y = dev["vectors"][cand_ids]
+        # tombstoned candidates: reassign to an unmatchable owner on device
+        cseg = jnp.asarray(np.concatenate(cseg_h))
+        cseg = jnp.where(dev["deleted"][cand_ids], -3, cseg)
+        v, li = ops.topk_segmented(jnp.asarray(queries), y,
+                                   jnp.asarray(qseg), cseg, k,
+                                   metric=self.metric)
+        v = np.asarray(v)
+        li = np.asarray(li)
+        cand_np = np.asarray(cand_ids, dtype=np.int64)
+        for r in range(len(queries)):
+            if qseg[r] < 0:
+                continue
+            valid = li[r] >= 0
+            parts[r].append((v[r][valid], cand_np[li[r][valid]]))
+
+    # ---- graph states ------------------------------------------------- #
+
+    def _graph_requests(self, plan) -> Dict[int, List[int]]:
+        """graph state -> request rows that must search it (chains of
+        different states can share an inherited graph)."""
+        m: Dict[int, List[int]] = {}
+        for e in plan.entries:
+            for u in e.graph_states:
+                m.setdefault(u, []).extend(e.requests)
+        return m
+
+    def _execute_graphs_host(self, queries, plan, k, ef_search, parts
+                             ) -> None:
+        for u, reqs in self._graph_requests(plan).items():
+            g = self.graph_objs[u]
+            for r in reqs:
+                d, i = g.search(queries[r], k, ef_search)
+                parts[r].append((d, i))
+
+    def _execute_graphs_device(self, queries, plan, k, ef_search, parts
+                               ) -> None:
+        import jax.numpy as jnp
+        from .hnsw_jax import hnsw_search_batch
+        dev = self.to_device()
+        # Over-fetch when tombstones exist so the post-merge filter can
+        # still fill k live results (host search skips them in-scan).
+        kk = k if not self.deleted else min(max(ef_search, k),
+                                            k + len(self.deleted))
+        for u, reqs in self._graph_requests(plan).items():
+            h = dev["graphs"][u]
+            d, i = hnsw_search_batch(
+                dev["vectors"], h["ids"], h["level0"], h["entry"],
+                jnp.asarray(queries[reqs]), k=kk, ef=max(ef_search, kk),
+                metric=self.metric)
+            d = np.asarray(d)
+            i = np.asarray(i, dtype=np.int64)
+            for row, r in enumerate(reqs):
+                valid = i[row] >= 0
+                parts[r].append((d[row][valid], i[row][valid]))
+
+    # ------------------------------------------------------------------ #
+    # accounting
+    # ------------------------------------------------------------------ #
+
+    def chain_ids(self, state: int) -> np.ndarray:
+        """V_state reconstructed from the CSR chain cover (Lemma 4)."""
+        segs = []
+        u = state
+        while u != -1:
+            segs.append(self.base_ids[self.base_ptr[u]:self.base_ptr[u + 1]])
+            u = int(self.inherit[u])
+        return (np.concatenate(segs) if segs else np.empty(0, np.int64))
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "states": len(self.kind),
+            "raw_states": int((self.kind == KIND_RAW).sum()),
+            "graph_states": int((self.kind == KIND_GRAPH).sum()),
+            "base_entries": int(self.base_ptr[-1]),
+            "device_resident": int(self._dev is not None),
+        }

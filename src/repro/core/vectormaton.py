@@ -10,10 +10,14 @@ Build (Algorithm 3 Build):
        - skip-build: |base(u)| < T  ->  raw ID set (brute-force at query
          time); otherwise an HNSW graph over base(u).
 
-Query (Algorithm 3 Query): walk the automaton along the pattern; then walk
-the inheritance chain from the reached state, searching every base index on
-the chain (raw sets are batched into ONE fused distance+top-k kernel call —
-the TPU adaptation of the paper's per-set brute force), and merge top-k.
+Query (Algorithm 3 Query): handled by the planner/executor runtime
+(core/packed.py, DESIGN.md §3).  At finalize time the chain structure and
+per-state indexes are flattened into struct-of-arrays form (CSR base-ID
+segments + padded graph matrices, uploaded to device once); at query time a
+host planner walks the automaton per request and coalesces identical-state
+requests, and a batched executor answers all raw segments with ONE segmented
+fused distance+top-k launch and all shared graphs with vmapped beam
+searches.  ``query`` is the single-request special case of ``query_batch``.
 
 Maintenance (paper §5): online insert extends the automaton and patches the
 affected base indexes without a global rebuild; deletes are lazy marks
@@ -35,6 +39,7 @@ import numpy as np
 
 from .esam import ESAM, ROOT
 from .hnsw import HNSW
+from .packed import PackedRuntime, QueryPlan
 
 _RAW = 0
 _HNSW = 1
@@ -86,6 +91,7 @@ class VectorMaton:
             self.esam.add_sequence(s)
         self.esam.finalize()
         self._build_state_indexes(workers=workers)
+        self._runtime: Optional[PackedRuntime] = PackedRuntime.build(self)
 
     # ------------------------------------------------------------------ #
     # index construction (Algorithm 3 lines 17-21)
@@ -189,59 +195,41 @@ class VectorMaton:
             u = self.inherit[u]
         return out
 
+    @property
+    def runtime(self) -> PackedRuntime:
+        """The packed query runtime, re-flattened lazily after structural
+        changes so a burst of inserts pays for one rebuild, not N."""
+        if self._runtime is None:
+            self._runtime = PackedRuntime.build(self)
+        return self._runtime
+
+    def _refresh_runtime(self) -> None:
+        """Invalidate after a structural change (insert / promotion)."""
+        self._runtime = None
+
+    def plan(self, patterns: Sequence[Sequence]) -> QueryPlan:
+        """Walk the automaton per request and coalesce identical-state
+        requests into one plan entry each (the host planner half)."""
+        return self.runtime.plan([self.esam.walk(p) for p in patterns])
+
     def query(self, v_q: np.ndarray, pattern: Sequence, k: int,
               ef_search: int = 64) -> Tuple[np.ndarray, np.ndarray]:
         """Top-k (distances, global ids) among vectors whose sequence
-        contains ``pattern``.  Empty pattern == unconstrained ANN."""
-        st = self.esam.walk(pattern)
-        if st == -1:
-            return (np.empty(0, np.float32), np.empty(0, np.int64))
-        v_q = np.asarray(v_q, dtype=np.float32)
-        raw_ids: List[np.ndarray] = []
-        cand_d: List[np.ndarray] = []
-        cand_i: List[np.ndarray] = []
-        for u in self._chain(st):
-            idx = self.state_index[u]
-            if idx is None or idx.n_indexed == 0:
-                continue
-            if idx.kind == _RAW:
-                raw_ids.append(idx.raw_ids)
-            else:
-                d, i = idx.graph.search(v_q, k, ef_search)
-                cand_d.append(d)
-                cand_i.append(i)
-        if raw_ids:
-            ids = np.concatenate(raw_ids)
-            d, i = self._brute(v_q, ids, min(k, len(ids)))
-            cand_d.append(d)
-            cand_i.append(i)
-        if not cand_i:
-            return (np.empty(0, np.float32), np.empty(0, np.int64))
-        d = np.concatenate(cand_d)
-        i = np.concatenate(cand_i)
-        if self.deleted:
-            keep = ~np.isin(i, np.fromiter(self.deleted, dtype=np.int64))
-            d, i = d[keep], i[keep]
-        order = np.argsort(d, kind="stable")[:k]
-        return d[order], i[order]
+        contains ``pattern``.  Empty pattern == unconstrained ANN.
+        Single-request special case of ``query_batch``."""
+        return self.query_batch(
+            np.asarray(v_q, dtype=np.float32)[None, :], [pattern], k,
+            ef_search=ef_search)[0]
 
-    def _brute(self, v_q: np.ndarray, ids: np.ndarray, k: int
-               ) -> Tuple[np.ndarray, np.ndarray]:
-        sub = self.vectors[ids]
-        if self.config.backend == "jax":
-            import jax.numpy as jnp
-            from ..kernels import ops
-            d, li = ops.topk(jnp.asarray(v_q[None, :]), jnp.asarray(sub), k,
-                             metric=self.config.metric)
-            d = np.asarray(d[0])
-            li = np.asarray(li[0])
-            valid = li >= 0
-            return d[valid], ids[li[valid]]
-        from ..kernels import ops
-        d, li = ops.topk_numpy(v_q[None, :], sub, k,
-                               metric=self.config.metric)
-        valid = li[0] >= 0
-        return d[0][valid], ids[li[0][valid]]
+    def query_batch(self, queries: np.ndarray,
+                    patterns: Sequence[Sequence], k: int,
+                    ef_search: int = 64
+                    ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Batched query path: plan once per distinct pattern state, then
+        one segmented device sweep for all raw segments + one vmapped beam
+        search per shared graph.  Returns [(dists, ids)] per request."""
+        return self.runtime.execute(queries, self.plan(patterns), k,
+                                    ef_search=ef_search)
 
     # ------------------------------------------------------------------ #
     # maintenance (paper §5)
@@ -292,14 +280,34 @@ class VectorMaton:
                 idx.raw_ids = np.append(idx.raw_ids, i)
                 if (not self.config.skip_build
                         or len(idx.raw_ids) >= 4 * self.config.T):
-                    pass  # promotion to HNSW is a rebuild concern; keep raw
+                    self.state_index[u] = self._promote(idx.raw_ids, u)
             else:
                 idx.graph.add(i)
+        self._refresh_runtime()
         return i
 
+    def _promote(self, raw_ids: np.ndarray, u: int) -> _StateIndex:
+        """Raw -> HNSW promotion once a raw set outgrows 4*T (paper §5): the
+        brute-force sweep over the set now costs more than a graph search,
+        so rebuild it as a graph against the packed runtime."""
+        g = HNSW(self.vectors, M=self.config.M, ef_con=self.config.ef_con,
+                 metric=self.config.metric, seed=self.config.seed + u)
+        g.build(raw_ids)
+        for vid in self.deleted & set(int(x) for x in raw_ids):
+            g.mark_deleted(vid)
+        return _StateIndex(_HNSW, graph=g)
+
     def delete(self, vector_id: int) -> None:
-        """Lazy deletion (paper §5): mark and filter at query time."""
-        self.deleted.add(int(vector_id))
+        """Lazy deletion (paper §5): mark and filter at query time.  The
+        tombstone is propagated into every per-state graph whose base set
+        contains the ID, so graph searches skip it in-scan instead of
+        returning it and crowding out live candidates before the
+        query-level filter."""
+        vid = int(vector_id)
+        self.deleted.add(vid)
+        for u in self.runtime.graph_states_of(vid):
+            self.state_index[u].graph.mark_deleted(vid)
+        self.runtime.mark_deleted(vid)
 
     # ------------------------------------------------------------------ #
     # accounting / serialization

@@ -114,6 +114,9 @@ def load_vectormaton(cls, path: str):
                 vm.vectors,
                 dict(np.load(os.path.join(path, f"graph_{u}.npz"))))
             vm.state_index.append(_StateIndex(_HNSW, graph=g))
+    # restored indexes flatten straight back into the packed query runtime —
+    # no rebuild, same restart path the serving tier uses after a failure
+    vm._refresh_runtime()
     return vm
 
 

@@ -8,8 +8,11 @@ reduced to a global top-k.  Collective volume is O(devices · k · 8 bytes)
 per query batch — negligible against the distance compute, which is why
 brute-force pattern-constrained search scales linearly in chips.
 
-State-index semantics: a state's candidate ID set is turned into a dense
-mask/subset on the host; this module only handles the numeric sweep.
+State-index semantics: `sharded_plan_topk` consumes a QueryPlan from the
+packed runtime's planner (core/packed.py) — each plan entry's chain CSR
+segments ARE the qualified subset V_p (Lemma 4), turned into a dense
+validity mask per entry; same-state requests share one sharded sweep.
+`sharded_topk` below is the raw numeric primitive.
 """
 
 from __future__ import annotations
@@ -81,6 +84,43 @@ def sharded_topk(mesh: Mesh, queries: jax.Array, base: jax.Array, k: int,
                                             else (None,)),
                    out_specs=(P(), P()), check_rep=False)
     return fn(queries, base, mask_arg)
+
+
+def sharded_plan_topk(mesh: Mesh, base: jax.Array, runtime, queries,
+                      plan, k: int, *, metric: str = "l2",
+                      axis: str = "data"):
+    """Execute a batched QueryPlan against a row-sharded vector table.
+
+    ``runtime`` is the PackedRuntime whose CSR the plan indexes into;
+    ``plan`` comes from ``runtime.plan(...)`` / ``VectorMaton.plan(...)``.
+    For each coalesced entry the full chain cover (raw + graph segments —
+    exactly V_p) becomes a validity mask, and ALL of the entry's requests
+    run through one sharded fused sweep.  Returns [(dists, ids)] aligned
+    with the request batch; tombstoned IDs never win.
+    """
+    import numpy as np
+    n = base.shape[0]
+    queries = jnp.asarray(queries, f32)
+    out = [(np.empty(0, np.float32), np.empty(0, np.int64))
+           ] * plan.n_requests
+    deleted = runtime.deleted
+    for entry in plan.entries:
+        mask = np.zeros(n, dtype=bool)
+        for lo, hi in entry.segments:
+            seg = runtime.base_ids[lo:hi]
+            mask[seg[seg < n]] = True
+        if deleted:
+            mask[[i for i in deleted if i < n]] = False
+        with mesh:
+            d, i = sharded_topk(mesh, queries[entry.requests, :], base, k,
+                                metric=metric, axis=axis,
+                                valid_mask=jnp.asarray(mask))
+        d = np.asarray(d)
+        i = np.asarray(i, dtype=np.int64)
+        for row, r in enumerate(entry.requests):
+            valid = np.isfinite(d[row]) & (i[row] >= 0)
+            out[r] = (d[row][valid], i[row][valid])
+    return out
 
 
 def replicate(mesh: Mesh, x: jax.Array) -> jax.Array:

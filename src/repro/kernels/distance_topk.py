@@ -72,6 +72,104 @@ def _topk_kernel(x_ref, y_ref, val_out_ref, idx_out_ref,
         idx_out_ref[...] = idx_scr[...]
 
 
+def _topk_seg_kernel(x_ref, y_ref, qseg_ref, cseg_ref, val_out_ref,
+                     idx_out_ref, val_scr, idx_scr, *, metric: str, k: int,
+                     block_n: int, n_blocks: int, valid_n: int):
+    """Segmented variant: row r may only take candidates c with
+    cseg[c] == qseg[r], so one launch serves many (query, id-set) pairs."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        val_scr[...] = jnp.full_like(val_scr, jnp.inf)
+        idx_scr[...] = jnp.full_like(idx_scr, -1)
+
+    x = x_ref[...].astype(jnp.float32)            # (bq, d)
+    y = y_ref[...].astype(jnp.float32)            # (bn, d)
+    xy = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    if metric == "l2":
+        x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+        y2 = jnp.sum(y * y, axis=-1)[None, :]
+        dist = jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)   # (bq, bn)
+    else:
+        dist = -xy
+
+    base = j * block_n
+    col_idx = base + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
+    owner_q = qseg_ref[...]                        # (bq, 1)
+    owner_c = cseg_ref[...]                        # (1, bn)
+    match = owner_q == owner_c                     # segment membership
+    if valid_n < n_blocks * block_n:
+        match = match & (col_idx < valid_n)
+    dist = jnp.where(match, dist, jnp.inf)
+
+    all_vals = jnp.concatenate([val_scr[...], dist], axis=1)
+    all_idx = jnp.concatenate(
+        [idx_scr[...], jnp.where(match, col_idx, -1)], axis=1)
+    neg_top, pos = jax.lax.top_k(-all_vals, k)
+    val_scr[...] = -neg_top
+    idx_scr[...] = jnp.take_along_axis(all_idx, pos, axis=1)
+
+    @pl.when(j == n_blocks - 1)
+    def _emit():
+        val_out_ref[...] = val_scr[...]
+        idx_out_ref[...] = idx_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "block_q",
+                                             "block_n", "interpret",
+                                             "valid_n"))
+def distance_topk_segmented(x: jax.Array, y: jax.Array, qseg: jax.Array,
+                            cseg: jax.Array, k: int, *, metric: str = "l2",
+                            block_q: int = BLOCK_Q, block_n: int = BLOCK_N,
+                            interpret: bool = False,
+                            valid_n: int | None = None):
+    """Segmented exact top-k.  x: (Q, d) queries, y: (N, d) concatenated
+    candidate segments, qseg: (Q, 1) owner id per query row, cseg: (1, N)
+    owner id per candidate row.  A candidate is eligible for a query iff the
+    owner ids match; ineligible pairs never win (distance +inf, index -1).
+
+    Padding convention (ops.py): padded query rows carry qseg -1 and padded
+    candidate rows carry cseg -2, so they never match anything.
+    """
+    q, d = x.shape
+    n, d2 = y.shape
+    assert d == d2 and q % block_q == 0 and n % block_n == 0
+    assert k <= block_n, (k, block_n)
+    assert qseg.shape == (q, 1) and cseg.shape == (1, n)
+    if valid_n is None:
+        valid_n = n
+    n_blocks = n // block_n
+    grid = (q // block_q, n_blocks)
+    kernel = functools.partial(_topk_seg_kernel, metric=metric, k=k,
+                               block_n=block_n, n_blocks=n_blocks,
+                               valid_n=valid_n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, y, qseg, cseg)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "metric", "block_q",
                                              "block_n", "interpret",
                                              "valid_n"))

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
-from .distance_topk import distance_topk
+from .distance_topk import distance_topk, distance_topk_segmented
 from .pairwise import pairwise_distance
 
 _LANE = 128
@@ -64,7 +64,7 @@ def topk(x: jax.Array, y: jax.Array, k: int, *, metric: str = "l2",
     if interpret is None:
         interpret = not _on_tpu()
     q, n = x.shape[0], y.shape[0]
-    kp = min(_round_up(k, 8), _LANE)  # scratch lane alignment
+    kp = _round_up(k, 8)  # scratch lane alignment
     if kp > _LANE:
         raise ValueError(f"k={k} exceeds kernel max {_LANE}")
     qp, np_ = _round_up(max(q, 1), _LANE), _round_up(max(n, 1), _LANE)
@@ -75,6 +75,42 @@ def topk(x: jax.Array, y: jax.Array, k: int, *, metric: str = "l2",
     vals, idx = vals[:q, :k], idx[:q, :k]
     # mask padded base rows
     invalid = idx >= n
+    vals = jnp.where(invalid, jnp.inf, vals)
+    idx = jnp.where(invalid, -1, idx)
+    return vals, idx
+
+
+def topk_segmented(x: jax.Array, y: jax.Array, qseg: jax.Array,
+                   cseg: jax.Array, k: int, *, metric: str = "l2",
+                   interpret: bool | None = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Segmented exact top-k: ONE kernel launch serving many (query, id-set)
+    pairs.  ``qseg`` (Q,) assigns each query row an owner id; ``cseg`` (N,)
+    assigns each candidate row an owner id; query r ranks only candidates c
+    with cseg[c] == qseg[r].  Owner ids must be >= 0; use qseg -1 for rows
+    that should match nothing.
+
+    Returns (Q, k) distances ascending + candidate-row indices into ``y``;
+    unfilled slots (segment smaller than k, or empty) are (+inf, -1).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    q, n = x.shape[0], y.shape[0]
+    kp = _round_up(k, 8)
+    if kp > _LANE:
+        raise ValueError(f"k={k} exceeds kernel max {_LANE}")
+    qp, np_ = _round_up(max(q, 1), _LANE), _round_up(max(n, 1), _LANE)
+    qseg = jnp.asarray(qseg, jnp.int32)
+    cseg = jnp.asarray(cseg, jnp.int32)
+    # Padded query rows own segment -1, padded candidate rows -2: neither
+    # matches anything, so padding can never be selected.
+    qseg_p = jnp.full((qp, 1), -1, jnp.int32).at[:q, 0].set(qseg)
+    cseg_p = jnp.full((1, np_), -2, jnp.int32).at[0, :n].set(cseg)
+    vals, idx = distance_topk_segmented(
+        _pad_to(x, qp), _pad_to(y, np_), qseg_p, cseg_p, kp, metric=metric,
+        interpret=interpret, valid_n=n)
+    vals, idx = vals[:q, :k], idx[:q, :k]
+    invalid = (idx < 0) | ~jnp.isfinite(vals)
     vals = jnp.where(invalid, jnp.inf, vals)
     idx = jnp.where(invalid, -1, idx)
     return vals, idx
@@ -107,4 +143,31 @@ def topk_numpy(x: np.ndarray, y: np.ndarray, k: int, *, metric: str = "l2"
     return vals, idx
 
 
-__all__ = ["pairwise_sqdist", "topk", "topk_numpy", "ref"]
+def topk_segmented_numpy(x: np.ndarray, y: np.ndarray, qseg: np.ndarray,
+                         cseg: np.ndarray, k: int, *, metric: str = "l2"
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host reference for ``topk_segmented`` (same output contract)."""
+    x = np.asarray(x, dtype=np.float32)
+    y = np.asarray(y, dtype=np.float32)
+    qseg = np.asarray(qseg, dtype=np.int64)
+    cseg = np.asarray(cseg, dtype=np.int64)
+    q = x.shape[0]
+    vals = np.full((q, k), np.inf, dtype=np.float32)
+    idx = np.full((q, k), -1, dtype=np.int32)
+    for r in range(q):
+        if qseg[r] < 0:
+            continue
+        cols = np.nonzero(cseg == qseg[r])[0]
+        if len(cols) == 0:
+            continue
+        v, li = topk_numpy(x[r:r + 1], y[cols], min(k, len(cols)),
+                           metric=metric)
+        valid = li[0] >= 0
+        m = int(valid.sum())
+        vals[r, :m] = v[0][valid]
+        idx[r, :m] = cols[li[0][valid]]
+    return vals, idx
+
+
+__all__ = ["pairwise_sqdist", "topk", "topk_segmented",
+           "topk_segmented_numpy", "topk_numpy", "ref"]

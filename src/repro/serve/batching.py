@@ -89,21 +89,25 @@ class ContinuousBatcher:
         return wave
 
     def run_wave(self) -> Dict[int, Response]:
-        """Execute one wave: group by automaton state, answer grouped."""
+        """Execute one wave through the batched planner/executor: the wave's
+        requests (grouped by k/ef) hit ``query_batch``, whose planner
+        coalesces same-state requests into shared plan entries."""
         wave = self.next_wave()
         out: Dict[int, Response] = {}
-        by_state: Dict[int, List[_Queued]] = {}
+        groups: Dict[Tuple[int, int], List[_Queued]] = {}
         for q in wave:
-            by_state.setdefault(q.state, []).append(q)
-        for st, items in by_state.items():
-            for q in items:
-                t0 = time.perf_counter()
-                d, i = self.engine.index.query(
-                    q.request.vector, q.request.pattern, q.request.k,
-                    ef_search=q.request.ef_search)
-                out[q.seq] = Response(
-                    ids=i, distances=d,
-                    latency_s=time.perf_counter() - q.t_arrival)
+            groups.setdefault((q.request.k, q.request.ef_search),
+                              []).append(q)
+        for (k, ef), items in groups.items():
+            queries = np.stack([np.asarray(q.request.vector, np.float32)
+                                for q in items])
+            patterns = [q.request.pattern for q in items]
+            results = self.engine.index.query_batch(queries, patterns, k,
+                                                    ef_search=ef)
+            t1 = time.perf_counter()
+            for q, (d, i) in zip(items, results):
+                out[q.seq] = Response(ids=i, distances=d,
+                                      latency_s=t1 - q.t_arrival)
                 self._deferred.pop(q.seq, None)
         return out
 

@@ -4,13 +4,12 @@ The end-to-end composition the paper targets: an encoder LM produces
 (vector, sequence) records; VectorMaton indexes them; queries arrive as
 (text/vector, pattern, k) triples and are answered under a latency budget.
 
-Request flow:
+Request flow (DESIGN.md §3):
   embed (batched, jit'd mean-pool over LM hidden states)
-    -> VectorMaton.query per request (automaton walk is µs-scale host work)
-    -> fused distance+top-k kernel for raw states (one device call per
-       batch — requests sharing a pattern state are coalesced).
-
-Also exposes `bulk_queries` used by the benchmark harness.
+    -> planner: automaton walk per request (µs-scale host work), identical
+       pattern states coalesced into one plan entry
+    -> batched executor: ONE segmented fused distance+top-k launch for all
+       raw segments in the batch + one vmapped beam search per shared graph.
 """
 
 from __future__ import annotations
@@ -36,7 +35,8 @@ class Request:
 class Response:
     ids: np.ndarray
     distances: np.ndarray
-    latency_s: float
+    latency_s: float    # batched serving: wall time of the request's wave
+                        # (every request in a batch waits for the batch)
 
 
 class RetrievalEngine:
@@ -55,16 +55,25 @@ class RetrievalEngine:
                         latency_s=time.perf_counter() - t0)
 
     def serve_batch(self, reqs: Sequence[Request]) -> List[Response]:
-        """Coalesce requests by automaton state so same-pattern requests
-        share the chain walk; distance work batches per state."""
-        by_state: Dict[int, List[int]] = {}
-        for idx, r in enumerate(reqs):
-            st = self.index.esam.walk(r.pattern)
-            by_state.setdefault(st, []).append(idx)
+        """Cross-request batched execution: requests are grouped by
+        (k, ef_search) and handed to ``VectorMaton.query_batch``, whose
+        planner coalesces same-state requests so the chain walk happens once
+        per distinct state and the distance work runs as one batched device
+        sweep instead of one call per request."""
         out: List[Optional[Response]] = [None] * len(reqs)
-        for st, idxs in by_state.items():
-            for idx in idxs:
-                out[idx] = self.serve(reqs[idx])
+        groups: Dict[Tuple[int, int], List[int]] = {}
+        for idx, r in enumerate(reqs):
+            groups.setdefault((r.k, r.ef_search), []).append(idx)
+        for (k, ef), idxs in groups.items():
+            t0 = time.perf_counter()
+            queries = np.stack([np.asarray(reqs[i].vector, np.float32)
+                                for i in idxs])
+            patterns = [reqs[i].pattern for i in idxs]
+            results = self.index.query_batch(queries, patterns, k,
+                                             ef_search=ef)
+            dt = time.perf_counter() - t0
+            for i, (d, ids) in zip(idxs, results):
+                out[i] = Response(ids=ids, distances=d, latency_s=dt)
         return out  # type: ignore[return-value]
 
     # ------------------------------------------------------------------ #

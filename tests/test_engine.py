@@ -31,6 +31,41 @@ def test_serve_batch_recall(engine):
     assert all(r.latency_s < 2.0 for r in resps)
 
 
+def test_serve_batch_equals_per_request(engine):
+    """Regression for the dead `by_state` grouping: coalesced batched
+    execution must return identical (distance, id) results to serving the
+    same requests one at a time — including repeated patterns and misses."""
+    eng, seqs = engine
+    rng = np.random.default_rng(9)
+    dim = eng.index.vectors.shape[1]
+    pats = sample_patterns(seqs, 2, 10) + ["@@nope@@"]
+    pats = [pats[i % len(pats)] for i in range(30)]   # force coalescing
+    reqs = [Request(vector=rng.standard_normal(dim).astype(np.float32),
+                    pattern=p, k=8) for p in pats]
+    plan = eng.index.plan([r.pattern for r in reqs])
+    assert plan.coalesced >= 4    # same-state requests actually share entries
+    batched = eng.serve_batch(reqs)
+    for req, resp in zip(reqs, batched):
+        single = eng.serve(req)
+        assert np.array_equal(single.ids, resp.ids)
+        np.testing.assert_allclose(single.distances, resp.distances,
+                                   rtol=1e-6)
+
+
+def test_serve_batch_mixed_k(engine):
+    eng, seqs = engine
+    rng = np.random.default_rng(10)
+    dim = eng.index.vectors.shape[1]
+    pats = sample_patterns(seqs, 2, 4)
+    reqs = [Request(vector=rng.standard_normal(dim).astype(np.float32),
+                    pattern=p, k=3 + (i % 2) * 5)
+            for i, p in enumerate(pats)]
+    for req, resp in zip(reqs, eng.serve_batch(reqs)):
+        assert len(resp.ids) <= req.k
+        single = eng.serve(req)
+        assert np.array_equal(single.ids, resp.ids)
+
+
 def test_corpora_shapes():
     for name, spec in SPECS.items():
         vecs, seqs = make_corpus(name, scale=0.05)

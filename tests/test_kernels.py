@@ -70,6 +70,89 @@ def test_topk_dtypes(dtype):
     assert overlap >= 0.8
 
 
+# --------------------------------------------------------------------- #
+# segmented path: one launch, many (query, id-set) pairs
+# --------------------------------------------------------------------- #
+
+def _random_segments(rng, sizes, d):
+    """Concatenated candidate segments + per-row owner ids."""
+    y = rng.standard_normal((sum(sizes), d)).astype(np.float32)
+    cseg = np.concatenate([np.full(s, o, np.int32)
+                           for o, s in enumerate(sizes)]) if sizes else \
+        np.empty(0, np.int32)
+    return y, cseg
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_topk_segmented_matches_per_segment_topk(metric):
+    """Parity with topk_numpy run per segment — including a segment smaller
+    than k and candidate counts off the 128-lane boundary."""
+    rng = np.random.default_rng(0)
+    sizes = [40, 3, 216]                      # total 259: crosses lane pad
+    d, k = 32, 9
+    y, cseg = _random_segments(rng, sizes, d)
+    qseg = np.array([0, 1, 2, 0, 2], np.int32)
+    x = rng.standard_normal((len(qseg), d)).astype(np.float32)
+    v, i = ops.topk_segmented(jnp.asarray(x), jnp.asarray(y), qseg, cseg, k,
+                              metric=metric)
+    v, i = np.asarray(v), np.asarray(i)
+    rv, ri = ops.topk_segmented_numpy(x, y, qseg, cseg, k, metric=metric)
+    assert np.array_equal(i, ri)
+    np.testing.assert_allclose(v[i >= 0], rv[ri >= 0], atol=2e-4, rtol=1e-4)
+    # per-segment cross-check against the dense oracle
+    for r, owner in enumerate(qseg):
+        cols = np.nonzero(cseg == owner)[0]
+        dv, di = ops.topk_numpy(x[r:r + 1], y[cols], min(k, len(cols)),
+                                metric=metric)
+        valid = di[0] >= 0
+        assert np.array_equal(i[r][i[r] >= 0], cols[di[0][valid]])
+        # segment smaller than k -> trailing (-1, inf)
+        if len(cols) < k:
+            assert np.all(i[r][len(cols):] == -1)
+            assert np.all(np.isinf(v[r][len(cols):]))
+
+
+def test_topk_segmented_empty_and_unmatched_segments():
+    rng = np.random.default_rng(1)
+    y, cseg = _random_segments(rng, [17], 16)
+    x = rng.standard_normal((3, 16)).astype(np.float32)
+    # owner 5 has no candidates; owner -1 matches nothing by convention
+    qseg = np.array([0, 5, -1], np.int32)
+    v, i = ops.topk_segmented(jnp.asarray(x), jnp.asarray(y), qseg, cseg, 4)
+    v, i = np.asarray(v), np.asarray(i)
+    assert np.all(i[1] == -1) and np.all(np.isinf(v[1]))
+    assert np.all(i[2] == -1) and np.all(np.isinf(v[2]))
+    assert np.all(i[0] >= 0)
+
+
+def test_topk_segmented_padded_lane_boundaries():
+    """Candidates exactly at / just past the 128 lane: padding rows carry an
+    unmatchable owner and must never be selected."""
+    rng = np.random.default_rng(2)
+    for n in (127, 128, 129, 256):
+        y, cseg = _random_segments(rng, [n], 8)
+        x = rng.standard_normal((1, 8)).astype(np.float32)
+        qseg = np.zeros(1, np.int32)
+        v, i = ops.topk_segmented(jnp.asarray(x), jnp.asarray(y), qseg,
+                                  cseg, 10)
+        i = np.asarray(i)
+        assert np.all(i[0] >= 0) and np.all(i[0] < n)
+        rv, ri = ops.topk_numpy(x, y, 10)
+        assert np.array_equal(i[0], ri[0])
+
+
+def test_topk_segmented_interleaved_owners():
+    """Owner ids need not be contiguous runs — the mask is positional."""
+    rng = np.random.default_rng(3)
+    y = rng.standard_normal((50, 12)).astype(np.float32)
+    cseg = (np.arange(50) % 2).astype(np.int32)
+    x = rng.standard_normal((2, 12)).astype(np.float32)
+    qseg = np.array([0, 1], np.int32)
+    v, i = ops.topk_segmented(jnp.asarray(x), jnp.asarray(y), qseg, cseg, 5)
+    i = np.asarray(i)
+    assert np.all(i[0] % 2 == 0) and np.all(i[1] % 2 == 1)
+
+
 def test_topk_numpy_matches_kernel():
     rng = np.random.default_rng(4)
     x = rng.standard_normal((9, 48)).astype(np.float32)
