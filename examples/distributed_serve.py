@@ -65,3 +65,25 @@ for r, (d, i) in enumerate(results):
     assert np.allclose(d, rv[0], atol=1e-3), "sharded mismatch"
 print(f"{len(workload)} requests in {dt*1e3:.1f} ms "
       f"(verified exact against single-host brute force)")
+
+# --- boolean predicates through the sharded path -------------------------
+# the compiled predicate composes into the per-entry validity mask, so the
+# sharded sweep answers AND/OR/NOT/LIKE exactly
+from repro.core.predicate import parse_predicate
+
+predicates = [f"{pats[0]} AND {pats[1]}", f"{pats[1]} OR {pats[2]}",
+              f"NOT {pats[0]}"]
+pplan = vm.plan(predicates)
+presults = sharded_plan_topk(mesh, base, vm.runtime, q_dev[:len(predicates)],
+                             pplan, 10)
+for r, (d, i) in enumerate(presults):
+    pred = parse_predicate(predicates[r])
+    ids = np.asarray([j for j, s in enumerate(seqs) if pred.matches(s)])
+    expect = min(10, len(ids))
+    assert len(d) == expect, (len(d), expect)
+    assert all(pred.matches(seqs[j]) for j in i.tolist()), "id ∉ predicate"
+    if expect:
+        rv, ri = ops.topk_numpy(queries[r:r + 1], vecs[ids], expect)
+        assert np.allclose(d, rv[0], atol=1e-3), "sharded predicate mismatch"
+print(f"{len(predicates)} boolean predicates served sharded "
+      f"(strategies={dict(pplan.strategies)}), verified exact")

@@ -2,8 +2,9 @@
 requests — the end-to-end serving driver (deliverable b).
 
 Embeds a corpus with a (smoke-sized) qwen3 LM, indexes the embeddings with
-their sequences, serves a batch of mixed-pattern requests, reports QPS and
-recall, then checkpoints and restores the engine.
+their sequences, serves a batch of mixed-pattern requests (plain CONTAINS
+plus boolean AND/OR/NOT and LIKE predicates), reports QPS and recall, then
+checkpoints and restores the engine.
 
     PYTHONPATH=src python examples/pattern_search.py
 """
@@ -15,6 +16,7 @@ import numpy as np
 
 from repro.configs import smoke_config
 from repro.core.baselines import ground_truth, recall
+from repro.core.predicate import parse_predicate
 from repro.core.vectormaton import VectorMatonConfig
 from repro.data.corpora import make_corpus, sample_patterns
 from repro.models.transformer import LM
@@ -66,7 +68,35 @@ recalls = [recall(resp.ids,
 print(f"{len(requests)} requests in {dt:.2f}s ({len(requests)/dt:.0f} QPS)"
       f", mean recall@10 = {np.mean(recalls):.3f}")
 
-# --- 4. fault tolerance: checkpoint, restore, keep serving --------------
+# --- 4. boolean predicates: AND / OR / NOT / LIKE -----------------------
+p2 = sample_patterns(sequences, 2, 8)
+p3 = sample_patterns(sequences, 3, 8)
+long_seqs = [s for s in sequences if len(s) >= 8]
+predicates = (
+    [f"{a} AND {b}" for a, b in zip(p2[:3], p3[:3])]
+    + [f"{a} OR {b}" for a, b in zip(p3[:3], p3[3:6])]
+    + [f"{a} AND NOT {b}" for a, b in zip(p2[3:5], p3[5:7])]
+    + [f"LIKE '%{s[:3]}%{s[-3:]}%'" for s in long_seqs[:3]]   # ordered LIKE
+)
+pred_reqs = [Request(vector=vectors[rng.integers(len(vectors))]
+                     + 0.1 * rng.standard_normal(vectors.shape[1]
+                                                 ).astype(np.float32),
+                     pattern=p, k=10) for p in predicates]
+plan = engine.index.plan(predicates)
+print(f"predicate plan: {len(plan.entries)} entries, "
+      f"strategies={dict(plan.strategies)}")
+t0 = time.time()
+pred_resps = engine.serve_batch(pred_reqs)
+dt = time.time() - t0
+for req, resp in zip(pred_reqs, pred_resps):
+    pred = parse_predicate(req.pattern)
+    assert all(pred.matches(sequences[i]) for i in resp.ids.tolist()), \
+        req.pattern
+print(f"{len(pred_reqs)} boolean-predicate requests in {dt:.2f}s "
+      f"({len(pred_reqs)/dt:.0f} QPS), all results satisfy their "
+      f"predicates")
+
+# --- 5. fault tolerance: checkpoint, restore, keep serving --------------
 engine.checkpoint("/tmp/vectormaton_engine")
 restored = RetrievalEngine.restore("/tmp/vectormaton_engine")
 r1 = engine.serve(requests[0])

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# CI entrypoint: tier-1 tests + a smoke query through the batched engine.
+# CI entrypoint: tier-1 tests + a smoke query through the batched engine
+# (plain patterns AND boolean predicates) + a benchmark smoke step.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -8,6 +9,7 @@ python -m pytest -x -q
 
 python - <<'PY'
 import numpy as np
+from repro.core.predicate import parse_predicate
 from repro.core.vectormaton import VectorMatonConfig
 from repro.serve.engine import Request, RetrievalEngine
 
@@ -16,16 +18,24 @@ seqs = ["".join(rng.choice(list("abcd"), size=rng.integers(5, 14)))
         for _ in range(120)]
 vecs = rng.standard_normal((120, 16)).astype(np.float32)
 eng = RetrievalEngine(vecs, seqs, VectorMatonConfig(T=20, M=8, ef_con=40))
+pats = ["ab", "ab", "ab", "ab", "cd", "a",
+        "ab AND cd", "ab OR cd", "NOT ab", "LIKE '%a%b%'"]
 reqs = [Request(vector=rng.standard_normal(16).astype(np.float32),
-                pattern=p, k=5) for p in ["ab", "ab", "ab", "ab", "cd", "a"]]
+                pattern=p, k=5) for p in pats]
 plan = eng.index.plan([r.pattern for r in reqs])
 resps = eng.serve_batch(reqs)
 for req, resp in zip(reqs, resps):
     single = eng.serve(req)
     assert np.array_equal(single.ids, resp.ids)
-    ok = {i for i, s in enumerate(seqs) if req.pattern in s}
-    assert set(resp.ids.tolist()) <= ok
+    pred = parse_predicate(req.pattern)
+    assert all(pred.matches(seqs[i]) for i in resp.ids.tolist())
 print(f"batched-engine smoke OK: {len(reqs)} requests, "
-      f"{len(plan.entries)} plan entries, {plan.coalesced} coalesced")
+      f"{len(plan.entries)} plan entries, {plan.coalesced} coalesced, "
+      f"strategies={dict(plan.strategies)}")
 PY
+
+# benchmark smoke: the selectivity sweep must run end-to-end on CPU and
+# hold recall for every strategy it exercises
+python -m benchmarks.bench_selectivity --smoke
+
 echo "ci.sh: all checks passed"

@@ -133,6 +133,12 @@ class ESAM:
                     break
                 lst.append(seq_id)
                 p = link[p]
+        # every sequence contains the empty pattern, so V_ROOT must hold
+        # every id — the per-symbol propagation above only reaches ROOT for
+        # non-empty sequences
+        root_ids = ids[ROOT]
+        if not root_ids or root_ids[-1] != seq_id:
+            root_ids.append(seq_id)
         self.total_symbols += len(seq)
         return seq_id
 

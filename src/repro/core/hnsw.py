@@ -198,9 +198,15 @@ class HNSW:
     # queries (host path)
     # ------------------------------------------------------------------ #
 
-    def search(self, q: np.ndarray, k: int, ef_search: int
+    def search(self, q: np.ndarray, k: int, ef_search: int,
+               allowed: Optional[np.ndarray] = None
                ) -> Tuple[np.ndarray, np.ndarray]:
-        """Returns (distances, global_ids), ascending, ≤ k entries."""
+        """Returns (distances, global_ids), ascending, ≤ k entries.
+
+        ``allowed`` — optional bool bitmap over GLOBAL ids (the packed
+        executor's composed conjunct mask): the beam traverses the graph
+        unfiltered but only allowed nodes are returned, mirroring the
+        device path's in-loop bitmap filter."""
         if self.entry == -1:
             return (np.empty(0, np.float32), np.empty(0, np.int64))
         q = np.asarray(q, dtype=np.float32)
@@ -213,6 +219,8 @@ class HNSW:
         for d, s in res:
             g = int(ids[s])
             if g in self._deleted:
+                continue
+            if allowed is not None and not allowed[g]:
                 continue
             out_d.append(d)
             out_i.append(g)

@@ -103,9 +103,109 @@ def hnsw_search(vectors: jax.Array, ids: jax.Array, level0: jax.Array,
     return out_d, out_g.astype(jnp.int32)
 
 
+@functools.partial(jax.jit, static_argnames=("k", "ef", "max_iter", "metric"))
+def hnsw_search_filtered(vectors: jax.Array, ids: jax.Array,
+                         level0: jax.Array, entry: jax.Array,
+                         query: jax.Array, allowed: jax.Array, *, k: int,
+                         ef: int, max_iter: int | None = None,
+                         metric: str = "l2"
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Beam search that consults a candidate bitmap in-loop (the packed
+    executor's ``filtered_graph`` strategy for boolean conjunctions).
+
+    ``allowed`` : (V,) bool over GLOBAL ids — the composed membership mask
+    of the other conjuncts (tombstones pre-composed by the caller).
+
+    The traversal beam is *unfiltered* — disallowed nodes still route the
+    walk, exactly like filtered-DiskANN-style search — while a separate
+    (k,)-slot result file folds in allowed nodes only.  Returns
+    (dists (k,), global_ids (k,)) ascending; unfilled = (inf, -1).
+    """
+    n = ids.shape[0]
+    if max_iter is None:
+        max_iter = 4 * ef + 16
+    q = query.astype(jnp.float32)
+
+    def dist_of(slots: jax.Array) -> jax.Array:
+        g = ids[jnp.clip(slots, 0, n - 1)]
+        v = vectors[g].astype(jnp.float32)
+        if metric == "l2":
+            diff = v - q[None, :]
+            return jnp.sum(diff * diff, axis=-1)
+        return -(v @ q)
+
+    def allowed_of(slots: jax.Array) -> jax.Array:
+        return allowed[ids[jnp.clip(slots, 0, n - 1)]]
+
+    entry_s = entry.astype(jnp.int32)
+    d0 = dist_of(entry_s[None])[0]
+    cand_s = jnp.full((ef,), -1, jnp.int32).at[0].set(entry_s)
+    cand_d = jnp.full((ef,), _INF, jnp.float32).at[0].set(d0)
+    expanded = jnp.zeros((ef,), jnp.bool_)
+    visited = jnp.zeros((n,), jnp.bool_).at[entry_s].set(True)
+    ok0 = allowed_of(entry_s[None])[0]
+    res_d = jnp.full((k,), _INF, jnp.float32).at[0].set(
+        jnp.where(ok0, d0, _INF))
+    res_s = jnp.full((k,), -1, jnp.int32).at[0].set(
+        jnp.where(ok0, entry_s, -1))
+
+    def cond(state):
+        i, cand_d, cand_s, expanded, visited, res_d, res_s = state
+        unexp = jnp.where(expanded | (cand_s < 0), _INF, cand_d)
+        best_unexp = jnp.min(unexp)
+        worst_kept = jnp.max(jnp.where(cand_s < 0, -_INF, cand_d))
+        return (i < max_iter) & jnp.isfinite(best_unexp) & (
+            best_unexp <= worst_kept)
+
+    def body(state):
+        i, cand_d, cand_s, expanded, visited, res_d, res_s = state
+        unexp = jnp.where(expanded | (cand_s < 0), _INF, cand_d)
+        pick = jnp.argmin(unexp)
+        expanded = expanded.at[pick].set(True)
+        node = cand_s[pick]
+
+        nb = level0[jnp.clip(node, 0, n - 1)]                  # (2M,)
+        valid = (nb >= 0) & ~visited[jnp.clip(nb, 0, n - 1)]
+        nd = jnp.where(valid, dist_of(nb), _INF)
+        visited = visited.at[jnp.clip(nb, 0, n - 1)].set(
+            visited[jnp.clip(nb, 0, n - 1)] | (nb >= 0))
+
+        # traversal fold: unfiltered, so the beam crosses masked-out nodes
+        all_d = jnp.concatenate([cand_d, nd])
+        all_s = jnp.concatenate([cand_s, jnp.where(valid, nb, -1)])
+        all_e = jnp.concatenate([expanded, jnp.zeros_like(valid)])
+        neg_top, pos = jax.lax.top_k(-all_d, ef)
+        cand_d = -neg_top
+        cand_s = all_s[pos]
+        expanded = all_e[pos]
+
+        # result fold: allowed nodes only
+        keep = valid & allowed_of(nb)
+        rd = jnp.concatenate([res_d, jnp.where(keep, nd, _INF)])
+        rs = jnp.concatenate([res_s, jnp.where(keep, nb, -1)])
+        neg_top, pos = jax.lax.top_k(-rd, k)
+        res_d = -neg_top
+        res_s = rs[pos]
+        return (i + 1, cand_d, cand_s, expanded, visited, res_d, res_s)
+
+    _, _, _, _, _, res_d, res_s = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), cand_d, cand_s, expanded, visited,
+                     res_d, res_s))
+    out_g = jnp.where(res_s >= 0, ids[jnp.clip(res_s, 0, n - 1)], -1)
+    out_d = jnp.where(res_s >= 0, res_d, _INF)
+    return out_d, out_g.astype(jnp.int32)
+
+
 def hnsw_search_batch(vectors, ids, level0, entry, queries, *, k, ef,
-                      max_iter=None, metric="l2"):
-    """vmap over queries: (B, d) -> (B, k) dists + global ids."""
-    fn = functools.partial(hnsw_search, k=k, ef=ef, max_iter=max_iter,
-                           metric=metric)
-    return jax.vmap(lambda q: fn(vectors, ids, level0, entry, q))(queries)
+                      max_iter=None, metric="l2", allowed=None):
+    """vmap over queries: (B, d) -> (B, k) dists + global ids.  With
+    ``allowed`` (a (V,) bool bitmap over global ids) the beam consults the
+    bitmap in-loop and returns allowed nodes only."""
+    if allowed is None:
+        fn = functools.partial(hnsw_search, k=k, ef=ef, max_iter=max_iter,
+                               metric=metric)
+        return jax.vmap(lambda q: fn(vectors, ids, level0, entry, q))(queries)
+    fn = functools.partial(hnsw_search_filtered, k=k, ef=ef,
+                           max_iter=max_iter, metric=metric)
+    return jax.vmap(
+        lambda q: fn(vectors, ids, level0, entry, q, allowed))(queries)

@@ -13,32 +13,39 @@ flattens them into struct-of-arrays form:
     segments is exactly V_state (Lemma 4);
   * per-graph padded neighbour matrices (``HNSW.pack()``) kept by state.
 
-Query execution then splits into a host **planner** and a device
-**executor**:
+Query execution splits into a host **planner** and a device **executor**
+over *compiled predicates* (core/predicate.py):
 
-  * ``PackedRuntime.plan`` walks the automaton per request and coalesces
-    identical-state requests into one ``PlanEntry`` carrying the chain's raw
-    CSR segments and graph handles — no per-state Python objects survive
-    into execution;
-  * ``PackedRuntime.execute`` answers the whole batch: ALL raw segments
-    across ALL entries go through ONE segmented fused distance+top-k call
-    (``ops.topk_segmented`` — a single Pallas launch serving many
-    (query, id-set) pairs), and each graph shared by several requests runs
-    one vmapped ``hnsw_search_batch`` call.
+  * ``PackedRuntime.plan`` coalesces requests with identical predicate keys
+    into one ``PlanEntry`` carrying the predicate's compiled sources —
+    chain covers, explicit id sets, composed membership masks, residual
+    verifiers — no per-state Python objects survive into execution;
+  * ``PackedRuntime.execute`` answers the whole batch: ALL brute-force
+    candidate sets across ALL entries/sources go through ONE segmented
+    fused distance+top-k call (``ops.topk_segmented``), graph states run
+    vmapped beam searches (optionally consulting a candidate bitmap
+    in-loop for ``filtered_graph`` sources), and ``residual`` sources run
+    an over-fetch + exact host-side verification loop until k verified
+    hits.  Per-request merge dedups ids across OR disjuncts, applies the
+    tombstone filter, and cuts to k.
 
 Device placement (DESIGN.md §2): ``to_device()`` uploads the vector table,
 the base-ID CSR, the per-graph matrices, and a deleted-mask exactly once;
-queries afterwards ship only the (tiny) plan — never index arrays.  The
-host backend runs the same plan against the same CSR with NumPy kernels so
-results are backend-independent for raw segments.
+queries afterwards ship only the plan — candidate id lists and masks, the
+same order of magnitude as the per-batch distance work itself.  The host
+backend runs the same plan with NumPy kernels so results are
+backend-independent for brute-forced sources.
 """
 
 from __future__ import annotations
 
+from collections import Counter
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from .predicate import CompiledPredicate, CompiledSource
 
 KIND_NONE = -1
 KIND_RAW = 0
@@ -49,25 +56,46 @@ _EMPTY_I = np.empty(0, np.int64)
 
 
 @dataclass
+class ChainCover:
+    """A state's inheritance-chain cover in CSR coordinates (== V_state)."""
+    segments: List[Tuple[int, int]]
+    raw_segments: List[Tuple[int, int]]
+    graph_states: List[int]
+    size: int
+
+
+@dataclass
 class PlanEntry:
-    """Execution plan for one automaton state (>= 1 coalesced requests)."""
-    state: int
+    """Execution plan for one compiled predicate (≥ 1 coalesced requests)."""
+    key: object                              # predicate coalescing key
     requests: List[int]                      # request positions in the batch
-    segments: List[Tuple[int, int]]          # full chain cover, CSR ranges
-    raw_segments: List[Tuple[int, int]]      # raw-kind subset of `segments`
-    graph_states: List[int]                  # graph-kind states on the chain
+    sources: List[CompiledSource]            # OR-disjuncts to execute+merge
+    est: int = 0                             # estimated |qualified set|
+
+    @property
+    def state(self) -> int:
+        """Anchor state when the entry is a plain CONTAINS chain; -1 for
+        boolean predicates (kept for introspection/tests)."""
+        if len(self.sources) == 1 and self.sources[0].strategy == "chain":
+            return self.sources[0].anchor
+        return -1
 
 
 @dataclass
 class QueryPlan:
     n_requests: int
     entries: List[PlanEntry]
-    misses: List[int]                        # requests whose pattern ∉ corpus
+    misses: List[int]                        # requests provably empty
 
     @property
     def coalesced(self) -> int:
         """Requests answered by a shared plan entry."""
         return sum(len(e.requests) - 1 for e in self.entries)
+
+    @property
+    def strategies(self) -> Counter:
+        """source strategy -> count, over all entries (bench/debug)."""
+        return Counter(s.strategy for e in self.entries for s in e.sources)
 
 
 class PackedRuntime:
@@ -77,7 +105,9 @@ class PackedRuntime:
                  inherit: np.ndarray, base_ptr: np.ndarray,
                  base_ids: np.ndarray, graphs: Dict[int, Dict[str, np.ndarray]],
                  graph_objs: Dict[int, object], *, metric: str = "l2",
-                 backend: str = "numpy", deleted: Optional[set] = None):
+                 backend: str = "numpy", deleted: Optional[set] = None,
+                 sequences: Optional[Sequence] = None,
+                 quantize: str = "none"):
         self.vectors = vectors
         self.kind = kind
         self.inherit = inherit
@@ -88,9 +118,12 @@ class PackedRuntime:
         self.metric = metric
         self.backend = backend
         self.deleted = deleted if deleted is not None else set()
+        self.sequences = list(sequences) if sequences is not None else []
+        self.quantize = quantize
         # state -> graph states whose base contains each id (delete fan-out)
         self._id_graph_states: Optional[Dict[int, List[int]]] = None
         self._dev: Optional[dict] = None    # device cache, built once
+        self._pred_cache: Dict[str, CompiledPredicate] = {}
 
     # ------------------------------------------------------------------ #
     # construction
@@ -127,7 +160,9 @@ class PackedRuntime:
         return cls(vm.vectors, kind, np.asarray(vm.inherit, dtype=np.int64),
                    base_ptr, base_ids, graphs, graph_objs,
                    metric=vm.config.metric, backend=vm.config.backend,
-                   deleted=vm.deleted)
+                   deleted=vm.deleted,
+                   sequences=getattr(vm, "sequences", None),
+                   quantize=getattr(vm.config, "quantize", "none"))
 
     # ------------------------------------------------------------------ #
     # device residency
@@ -176,34 +211,63 @@ class PackedRuntime:
     # planner (host)
     # ------------------------------------------------------------------ #
 
-    def plan(self, states: Sequence[int]) -> QueryPlan:
-        """Coalesce a batch of walked automaton states into plan entries.
-        ``states[r]`` is the state request r reached (-1 = no match)."""
-        entries: Dict[int, PlanEntry] = {}
+    def plan(self, compiled: Sequence[CompiledPredicate]) -> QueryPlan:
+        """Coalesce a batch of compiled predicates into plan entries.
+        Requests whose predicates share a canonical key share one entry;
+        provably-empty predicates (pattern ∉ corpus) are misses."""
+        entries: Dict[object, PlanEntry] = {}
         misses: List[int] = []
-        for r, st in enumerate(states):
-            if st < 0:
+        for r, cp in enumerate(compiled):
+            if cp.empty:
                 misses.append(r)
                 continue
-            e = entries.get(st)
+            e = entries.get(cp.key)
             if e is None:
-                segments: List[Tuple[int, int]] = []
-                raw_segments: List[Tuple[int, int]] = []
-                graph_states: List[int] = []
-                u = st
-                while u != -1:
-                    lo, hi = int(self.base_ptr[u]), int(self.base_ptr[u + 1])
-                    if hi > lo:
-                        segments.append((lo, hi))
-                        if self.kind[u] == KIND_RAW:
-                            raw_segments.append((lo, hi))
-                        else:
-                            graph_states.append(u)
-                    u = int(self.inherit[u])
-                e = PlanEntry(st, [], segments, raw_segments, graph_states)
-                entries[st] = e
+                e = PlanEntry(cp.key, [], cp.sources, cp.est)
+                entries[cp.key] = e
             e.requests.append(r)
-        return QueryPlan(len(states), list(entries.values()), misses)
+        return QueryPlan(len(compiled), list(entries.values()), misses)
+
+    def chain_cover(self, state: int) -> ChainCover:
+        """Walk the inheritance chain; CSR ranges covering exactly V_state."""
+        segments: List[Tuple[int, int]] = []
+        raw_segments: List[Tuple[int, int]] = []
+        graph_states: List[int] = []
+        size = 0
+        u = state
+        while u != -1:
+            lo, hi = int(self.base_ptr[u]), int(self.base_ptr[u + 1])
+            if hi > lo:
+                segments.append((lo, hi))
+                size += hi - lo
+                if self.kind[u] == KIND_RAW:
+                    raw_segments.append((lo, hi))
+                else:
+                    graph_states.append(u)
+            u = int(self.inherit[u])
+        return ChainCover(segments, raw_segments, graph_states, size)
+
+    def entry_mask(self, entry: PlanEntry) -> np.ndarray:
+        """Exact (n,) bool membership of the entry's qualified set — OR over
+        sources, residual verification applied.  Feeds the distributed
+        path's per-entry validity mask and the test oracles."""
+        n = len(self.vectors)
+        m = np.zeros(n, dtype=bool)
+        for s in entry.sources:
+            sm = np.zeros(n, dtype=bool)
+            if s.strategy in ("chain", "filtered_graph"):
+                for lo, hi in s.segments:
+                    sm[self.base_ids[lo:hi]] = True
+                if s.allowed is not None:
+                    sm &= s.allowed
+            else:
+                sm[s.ids] = True
+            if s.verify is not None:
+                for i in np.nonzero(sm)[0]:
+                    if not s.verify.matches(self.sequences[int(i)]):
+                        sm[i] = False
+            m |= sm
+        return m
 
     # ------------------------------------------------------------------ #
     # executor
@@ -214,8 +278,11 @@ class PackedRuntime:
                 ) -> List[Tuple[np.ndarray, np.ndarray]]:
         """Answer every request in the plan; returns [(dists, ids)] aligned
         with the request batch.  Device (jax) backend: one segmented kernel
-        launch for all raw segments + one vmapped beam search per shared
-        graph.  Host (numpy) backend: same plan, NumPy kernels."""
+        launch for all brute-forced candidate sets + one vmapped beam
+        search per shared graph (bitmap-filtered for conjunctions).  Host
+        (numpy) backend: same plan, NumPy kernels.  ``residual`` sources
+        (multi-segment LIKE, negated LIKE) run an over-fetch + host-verify
+        loop on either backend."""
         queries = np.ascontiguousarray(queries, dtype=np.float32)
         out: List[Tuple[np.ndarray, np.ndarray]] = [
             (_EMPTY_F, _EMPTY_I)] * plan.n_requests
@@ -223,12 +290,21 @@ class PackedRuntime:
             return out
         parts: List[List[Tuple[np.ndarray, np.ndarray]]] = [
             [] for _ in range(plan.n_requests)]
+        scan_items, graph_shared, graph_filtered, residual_items = (
+            self._gather_work(plan))
         if self.backend == "jax":
-            self._execute_raw_device(queries, plan, k, parts)
-            self._execute_graphs_device(queries, plan, k, ef_search, parts)
+            if self.quantize == "sq8":
+                self._execute_scan_sq8(queries, scan_items, k, parts)
+            else:
+                self._execute_scan_device(queries, scan_items, k, parts)
+            self._execute_graphs_device(queries, graph_shared, graph_filtered,
+                                        k, ef_search, parts)
         else:
-            self._execute_raw_host(queries, plan, k, parts)
-            self._execute_graphs_host(queries, plan, k, ef_search, parts)
+            self._execute_scan_host(queries, scan_items, k, parts)
+            self._execute_graphs_host(queries, graph_shared, graph_filtered,
+                                      k, ef_search, parts)
+        for e, s in residual_items:
+            self._execute_residual(queries, e, s, k, parts)
         for r in range(plan.n_requests):
             if not parts[r]:
                 continue
@@ -237,24 +313,66 @@ class PackedRuntime:
             if self.deleted:
                 keep = ~np.isin(i, np.fromiter(self.deleted, dtype=np.int64))
                 d, i = d[keep], i[keep]
-            order = np.argsort(d, kind="stable")[:k]
-            out[r] = (d[order], i[order])
+            order = np.argsort(d, kind="stable")
+            d, i = d[order], i[order]
+            # OR disjuncts can overlap: keep the first (closest) per id
+            _, first = np.unique(i, return_index=True)
+            if len(first) != len(i):
+                keep = np.zeros(len(i), dtype=bool)
+                keep[first] = True
+                d, i = d[keep], i[keep]
+            out[r] = (d[:k], i[:k])
         return out
 
-    # ---- raw segments ------------------------------------------------- #
-
-    def _execute_raw_host(self, queries, plan, k, parts) -> None:
-        from ..kernels import ops
+    def _gather_work(self, plan: QueryPlan):
+        """Split the plan into the executor's four work classes."""
+        scan_items: List[Tuple[PlanEntry, np.ndarray]] = []
+        graph_shared: Dict[int, List[int]] = {}
+        graph_filtered: List[Tuple[int, np.ndarray, List[int]]] = []
+        residual_items: List[Tuple[PlanEntry, CompiledSource]] = []
         for e in plan.entries:
-            if not e.raw_segments:
+            for s in e.sources:
+                if s.strategy == "chain":
+                    if s.raw_segments:
+                        cand = np.concatenate(
+                            [self.base_ids[lo:hi]
+                             for lo, hi in s.raw_segments])
+                        scan_items.append((e, cand))
+                    for u in s.graph_states:
+                        graph_shared.setdefault(u, []).extend(e.requests)
+                elif s.strategy == "scan":
+                    if len(s.ids):
+                        scan_items.append((e, s.ids))
+                elif s.strategy == "filtered_graph":
+                    if s.raw_segments:
+                        cand = np.concatenate(
+                            [self.base_ids[lo:hi]
+                             for lo, hi in s.raw_segments])
+                        cand = cand[s.allowed[cand]]
+                        if len(cand):
+                            scan_items.append((e, cand))
+                    for u in s.graph_states:
+                        graph_filtered.append((u, s.allowed, e.requests))
+                elif s.strategy == "residual":
+                    residual_items.append((e, s))
+                else:  # pragma: no cover - compiler invariant
+                    raise ValueError(f"unknown strategy {s.strategy!r}")
+        return scan_items, graph_shared, graph_filtered, residual_items
+
+    # ---- brute-forced candidate sets ---------------------------------- #
+
+    def _live(self, cand: np.ndarray) -> np.ndarray:
+        if self.deleted:
+            cand = cand[~np.isin(
+                cand, np.fromiter(self.deleted, dtype=np.int64))]
+        return cand
+
+    def _execute_scan_host(self, queries, scan_items, k, parts) -> None:
+        from ..kernels import ops
+        for e, cand in scan_items:
+            cand = self._live(cand)
+            if len(cand) == 0:
                 continue
-            cand = np.concatenate(
-                [self.base_ids[lo:hi] for lo, hi in e.raw_segments])
-            if self.deleted:
-                cand = cand[~np.isin(
-                    cand, np.fromiter(self.deleted, dtype=np.int64))]
-                if len(cand) == 0:
-                    continue
             sub = self.vectors[cand]
             d, li = ops.topk_numpy(queries[e.requests], sub,
                                    min(k, len(cand)), metric=self.metric)
@@ -262,67 +380,80 @@ class PackedRuntime:
                 valid = li[row] >= 0
                 parts[r].append((d[row][valid], cand[li[row][valid]]))
 
-    def _execute_raw_device(self, queries, plan, k, parts) -> None:
-        """One segmented Pallas launch for every raw segment in the batch."""
+    def _execute_scan_device(self, queries, scan_items, k, parts) -> None:
+        """ONE segmented Pallas launch for every brute-forced candidate set
+        in the batch — chain raw segments, OR-union scans, masked
+        conjunction scans alike.  Entries with several sources expand into
+        one query row per (request, source) pair."""
         import jax.numpy as jnp
         from ..kernels import ops
-        dev = self.to_device()
-        rows: List[np.ndarray] = []
-        cseg_h: List[np.ndarray] = []
-        qseg = np.full(len(queries), -1, dtype=np.int32)
-        owners: List[PlanEntry] = []
-        for e in plan.entries:
-            if not e.raw_segments:
-                continue
-            owner = len(owners)
-            owners.append(e)
-            total = 0
-            for lo, hi in e.raw_segments:
-                rows.append(np.arange(lo, hi, dtype=np.int32))
-                total += hi - lo
-            cseg_h.append(np.full(total, owner, dtype=np.int32))
-            qseg[e.requests] = owner
-        if not owners:
+        if not scan_items:
             return
-        row_idx = jnp.asarray(np.concatenate(rows))
-        cand_ids = dev["base_ids"][row_idx]          # device gather
-        y = dev["vectors"][cand_ids]
+        dev = self.to_device()
+        q_rows: List[int] = []
+        q_owner: List[int] = []
+        cand_chunks: List[np.ndarray] = []
+        cseg_chunks: List[np.ndarray] = []
+        for owner, (e, cand) in enumerate(scan_items):
+            cand_chunks.append(cand)
+            cseg_chunks.append(np.full(len(cand), owner, dtype=np.int32))
+            q_rows.extend(e.requests)
+            q_owner.extend([owner] * len(e.requests))
+        cand_np = np.concatenate(cand_chunks)
+        cand_dev = jnp.asarray(cand_np, jnp.int32)
+        y = dev["vectors"][cand_dev]
         # tombstoned candidates: reassign to an unmatchable owner on device
-        cseg = jnp.asarray(np.concatenate(cseg_h))
-        cseg = jnp.where(dev["deleted"][cand_ids], -3, cseg)
-        v, li = ops.topk_segmented(jnp.asarray(queries), y,
-                                   jnp.asarray(qseg), cseg, k,
-                                   metric=self.metric)
+        cseg = jnp.asarray(np.concatenate(cseg_chunks))
+        cseg = jnp.where(dev["deleted"][cand_dev], -3, cseg)
+        v, li = ops.topk_segmented(jnp.asarray(queries[q_rows]), y,
+                                   jnp.asarray(np.asarray(q_owner,
+                                                          np.int32)),
+                                   cseg, k, metric=self.metric)
         v = np.asarray(v)
         li = np.asarray(li)
-        cand_np = np.asarray(cand_ids, dtype=np.int64)
-        for r in range(len(queries)):
-            if qseg[r] < 0:
+        for row, r in enumerate(q_rows):
+            valid = li[row] >= 0
+            parts[r].append((v[row][valid], cand_np[li[row][valid]]))
+
+    def _execute_scan_sq8(self, queries, scan_items, k, parts) -> None:
+        """Opt-in SQ8 backend (``VectorMatonConfig.quantize='sq8'``): each
+        candidate set runs the quantized scan + fp32 rerank instead of the
+        fp32 segmented kernel.  Overfetch is clamped so k·overfetch stays
+        inside the rerank kernel's 128-lane budget."""
+        import jax.numpy as jnp
+        from ..kernels.quant import topk_sq8_rerank
+        overfetch = max(1, min(4, 128 // max(k, 1)))
+        for e, cand in scan_items:
+            cand = self._live(cand)
+            if len(cand) == 0:
                 continue
-            valid = li[r] >= 0
-            parts[r].append((v[r][valid], cand_np[li[r][valid]]))
+            kk = min(k, len(cand))
+            v, li = topk_sq8_rerank(jnp.asarray(queries[e.requests]),
+                                    jnp.asarray(self.vectors[cand]), kk,
+                                    overfetch=overfetch)
+            v = np.asarray(v)
+            li = np.asarray(li)
+            for row, r in enumerate(e.requests):
+                valid = li[row] >= 0
+                parts[r].append((v[row][valid], cand[li[row][valid]]))
 
     # ---- graph states ------------------------------------------------- #
 
-    def _graph_requests(self, plan) -> Dict[int, List[int]]:
-        """graph state -> request rows that must search it (chains of
-        different states can share an inherited graph)."""
-        m: Dict[int, List[int]] = {}
-        for e in plan.entries:
-            for u in e.graph_states:
-                m.setdefault(u, []).extend(e.requests)
-        return m
-
-    def _execute_graphs_host(self, queries, plan, k, ef_search, parts
-                             ) -> None:
-        for u, reqs in self._graph_requests(plan).items():
+    def _execute_graphs_host(self, queries, graph_shared, graph_filtered,
+                             k, ef_search, parts) -> None:
+        for u, reqs in graph_shared.items():
             g = self.graph_objs[u]
             for r in reqs:
                 d, i = g.search(queries[r], k, ef_search)
                 parts[r].append((d, i))
+        for u, allowed, reqs in graph_filtered:
+            g = self.graph_objs[u]
+            for r in reqs:
+                d, i = g.search(queries[r], k, ef_search, allowed=allowed)
+                parts[r].append((d, i))
 
-    def _execute_graphs_device(self, queries, plan, k, ef_search, parts
-                               ) -> None:
+    def _execute_graphs_device(self, queries, graph_shared, graph_filtered,
+                               k, ef_search, parts) -> None:
         import jax.numpy as jnp
         from .hnsw_jax import hnsw_search_batch
         dev = self.to_device()
@@ -330,7 +461,7 @@ class PackedRuntime:
         # still fill k live results (host search skips them in-scan).
         kk = k if not self.deleted else min(max(ef_search, k),
                                             k + len(self.deleted))
-        for u, reqs in self._graph_requests(plan).items():
+        for u, reqs in graph_shared.items():
             h = dev["graphs"][u]
             d, i = hnsw_search_batch(
                 dev["vectors"], h["ids"], h["level0"], h["entry"],
@@ -341,6 +472,101 @@ class PackedRuntime:
             for row, r in enumerate(reqs):
                 valid = i[row] >= 0
                 parts[r].append((d[row][valid], i[row][valid]))
+        for u, allowed, reqs in graph_filtered:
+            h = dev["graphs"][u]
+            # tombstones composed into the candidate bitmap: the filtered
+            # fold only admits allowed nodes, so k slots stay live
+            amask = jnp.asarray(allowed) & ~dev["deleted"]
+            d, i = hnsw_search_batch(
+                dev["vectors"], h["ids"], h["level0"], h["entry"],
+                jnp.asarray(queries[reqs]), k=k, ef=max(ef_search, k),
+                metric=self.metric, allowed=amask)
+            d = np.asarray(d)
+            i = np.asarray(i, dtype=np.int64)
+            for row, r in enumerate(reqs):
+                valid = i[row] >= 0
+                parts[r].append((d[row][valid], i[row][valid]))
+
+    # ---- residual verification (strategy c) --------------------------- #
+
+    def _dense_topk(self, qmat: np.ndarray, cand: np.ndarray, m: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact top-m of ``qmat`` against ``vectors[cand]`` (indices into
+        ``cand``).  m is unbounded (the over-fetch loop outgrows the
+        128-lane streaming kernel), so the device path uses a dense
+        distance + ``lax.top_k`` instead of Pallas."""
+        m = min(m, len(cand))
+        if self.backend == "jax":
+            import jax
+            import jax.numpy as jnp
+            dev = self.to_device()
+            x = jnp.asarray(qmat)
+            y = dev["vectors"][jnp.asarray(cand, jnp.int32)]
+            if self.metric == "l2":
+                d = (jnp.sum(x * x, 1, keepdims=True) + jnp.sum(y * y, 1)
+                     - 2.0 * x @ y.T)
+                d = jnp.maximum(d, 0.0)
+            else:
+                d = -(x @ y.T)
+            neg, idx = jax.lax.top_k(-d, m)
+            return np.asarray(-neg), np.asarray(idx)
+        from ..kernels import ops
+        return ops.topk_numpy(qmat, self.vectors[cand], m,
+                              metric=self.metric)
+
+    def _execute_residual(self, queries, e: PlanEntry, s: CompiledSource,
+                          k: int, parts) -> None:
+        """Over-fetch + exact host-side verification: fetch top-m of the
+        automaton prefilter, verify each hit against the full predicate on
+        its sequence, double m and re-fetch until every request has k
+        verified hits (or the prefilter is exhausted)."""
+        cand = self._live(s.ids)
+        if len(cand) == 0:
+            return
+        seqs = self.sequences
+        cache: Dict[int, bool] = {}
+
+        def ok(gid: int) -> bool:
+            v = cache.get(gid)
+            if v is None:
+                v = bool(s.verify.matches(seqs[gid]))
+                cache[gid] = v
+            return v
+
+        reqs = e.requests
+        m = min(len(cand), max(4 * k, k))
+        while True:
+            d, li = self._dense_topk(queries[reqs], cand, m)
+            done = True
+            for row in range(len(reqs)):
+                cnt = 0
+                for c in li[row]:
+                    if c < 0:
+                        break
+                    if ok(int(cand[c])):
+                        cnt += 1
+                        if cnt >= k:
+                            break
+                if cnt < k:
+                    done = False
+                    break
+            if done or m >= len(cand):
+                break
+            m = min(2 * m, len(cand))
+        for row, r in enumerate(reqs):
+            vd: List[float] = []
+            vi: List[int] = []
+            for pos, c in enumerate(li[row]):
+                if c < 0:
+                    break
+                gid = int(cand[c])
+                if ok(gid):
+                    vd.append(float(d[row][pos]))
+                    vi.append(gid)
+                    if len(vi) == k:
+                        break
+            parts[r].append((np.asarray(vd, np.float32),
+                             np.asarray(vi, np.int64)))
 
     # ------------------------------------------------------------------ #
     # accounting

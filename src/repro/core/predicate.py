@@ -1,0 +1,641 @@
+"""Boolean pattern predicates — AST, parser, and plan compiler (DESIGN.md §3).
+
+The paper motivates VectorMaton with SQL-style ``LIKE``/``CONTAINS``
+predicates over sequence attributes; real filtered-ANNS workloads arrive as
+*boolean combinations* of such predicates.  This module is the layer that
+turns a predicate into something the packed executor can run:
+
+  * **AST** — ``Contains``, ``Like`` (``%``/``_`` wildcards), ``And``,
+    ``Or``, ``Not``; every node evaluates exactly on a host sequence
+    (``matches``) and canonicalizes to a coalescing key (``key``).
+  * **Parser** — a tiny recursive-descent grammar over request strings:
+    ``CONTAINS 'ab' AND NOT (cd OR LIKE 'a%b_')``.  A string with no
+    predicate syntax is a plain CONTAINS pattern, so every pre-existing
+    request shape keeps working verbatim.
+  * **Compiler** — lowers a predicate to a list of ``CompiledSource``
+    disjuncts against a ``PackedRuntime``.  Each leaf resolves to an ESAM
+    state cover (the chain of CSR base segments whose union is exactly
+    V_state, Lemma 4) with selectivity taken from ``|V_state|``; boolean
+    structure picks a per-source strategy:
+
+      - ``chain``          — single CONTAINS: the legacy raw+graph chain.
+      - ``scan``           — segmented brute-force over an explicit id set
+                             (Or-unions deduped via a membership bitmap,
+                             low-selectivity And intersections, Not
+                             complements).
+      - ``filtered_graph`` — beam search over the smallest conjunct's
+                             graphs consulting a composed candidate bitmap
+                             in-loop, for high-selectivity conjunctions.
+      - ``residual``       — automaton prefilter + exact host-side
+                             verification with an over-fetch loop, for
+                             multi-segment ``LIKE '%a%b%'`` (the automaton
+                             can only prefilter it as ``a AND b``) and
+                             negated LIKE.
+
+The compiler never consults per-state Python index objects — only the
+packed CSR/inherit arrays — so compiled predicates are pure plan data, the
+same contract plan entries already obey.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Predicate", "Contains", "Like", "And", "Or", "Not",
+    "PredicateSyntaxError", "parse_predicate", "as_predicate",
+    "CompiledSource", "CompiledPredicate", "compile_predicate",
+]
+
+# Strategy thresholds: a conjunction whose anchor chain owns graph states
+# only uses them when the composed mask keeps enough of the anchor alive
+# for beam search to navigate (the filtered-ANNS survey's flip point).
+FILTERED_GRAPH_MIN_KEEP = 64        # absolute floor on surviving candidates
+FILTERED_GRAPH_MIN_FRAC = 0.25      # fraction of the anchor cover surviving
+
+
+# ===================================================================== #
+# AST
+# ===================================================================== #
+
+class Predicate:
+    """Base class.  Subclasses are immutable value objects."""
+
+    def key(self) -> str:
+        raise NotImplementedError
+
+    def matches(self, seq) -> bool:
+        """Exact host-side evaluation against one sequence."""
+        raise NotImplementedError
+
+    # sugar so tests/examples can compose: a & b, a | b, ~a
+    def __and__(self, other: "Predicate") -> "And":
+        return And([self, other])
+
+    def __or__(self, other: "Predicate") -> "Or":
+        return Or([self, other])
+
+    def __invert__(self) -> "Not":
+        return Not(self)
+
+    def __repr__(self) -> str:
+        return self.key()
+
+
+class Contains(Predicate):
+    """Substring containment — the paper's single-pattern predicate."""
+
+    def __init__(self, pattern) -> None:
+        self.pattern = pattern if isinstance(pattern, str) else tuple(pattern)
+
+    def key(self) -> str:
+        return f"CONTAINS({self.pattern!r})"
+
+    def matches(self, seq) -> bool:
+        if isinstance(self.pattern, str) and isinstance(seq, str):
+            return self.pattern in seq
+        pat = tuple(self.pattern)
+        s = tuple(seq)
+        L = len(pat)
+        if L == 0:
+            return True
+        return any(s[i:i + L] == pat for i in range(len(s) - L + 1))
+
+
+class Like(Predicate):
+    """SQL LIKE over the whole sequence: ``%`` = any run (incl. empty),
+    ``_`` = exactly one symbol.  String sequences only."""
+
+    def __init__(self, pattern: str) -> None:
+        if not isinstance(pattern, str):
+            raise TypeError("LIKE patterns must be strings")
+        self.pattern = pattern
+
+    def key(self) -> str:
+        return f"LIKE({self.pattern!r})"
+
+    def regex(self) -> "re.Pattern":
+        parts = []
+        for ch in self.pattern:
+            if ch == "%":
+                parts.append(".*")
+            elif ch == "_":
+                parts.append(".")
+            else:
+                parts.append(re.escape(ch))
+        return re.compile("".join(parts), re.DOTALL)
+
+    def matches(self, seq) -> bool:
+        if not isinstance(seq, str):
+            raise TypeError("LIKE predicates require string sequences")
+        return self.regex().fullmatch(seq) is not None
+
+    def literals(self) -> List[str]:
+        """Maximal wildcard-free runs — each is a necessary CONTAINS."""
+        return [lit for lit in re.split(r"[%_]+", self.pattern) if lit]
+
+    def as_contains(self) -> Optional[Contains]:
+        """``%lit%`` (no ``_``) is exactly CONTAINS(lit); bare ``%`` runs
+        are the empty pattern (match-all).  ``LIKE ''`` is NOT rewritable:
+        it matches only the empty sequence (residual verification)."""
+        collapsed = re.sub(r"%+", "%", self.pattern)
+        if collapsed == "%":
+            return Contains("")
+        m = re.fullmatch(r"%([^%_]+)%", collapsed)
+        if m:
+            return Contains(m.group(1))
+        return None
+
+
+class And(Predicate):
+    def __init__(self, children: Sequence[Predicate]) -> None:
+        self.children = list(children)
+
+    def key(self) -> str:
+        return "AND(" + ",".join(c.key() for c in self.children) + ")"
+
+    def matches(self, seq) -> bool:
+        return all(c.matches(seq) for c in self.children)
+
+
+class Or(Predicate):
+    def __init__(self, children: Sequence[Predicate]) -> None:
+        self.children = list(children)
+
+    def key(self) -> str:
+        return "OR(" + ",".join(c.key() for c in self.children) + ")"
+
+    def matches(self, seq) -> bool:
+        return any(c.matches(seq) for c in self.children)
+
+
+class Not(Predicate):
+    def __init__(self, child: Predicate) -> None:
+        self.child = child
+
+    def key(self) -> str:
+        return f"NOT({self.child.key()})"
+
+    def matches(self, seq) -> bool:
+        return not self.child.matches(seq)
+
+
+# ===================================================================== #
+# parser
+# ===================================================================== #
+
+class PredicateSyntaxError(ValueError):
+    pass
+
+
+_KEYWORDS = {"AND", "OR", "NOT", "LIKE", "CONTAINS"}
+
+
+def _tokenize(text: str) -> List[Tuple[str, str]]:
+    """[(kind, value)] with kind in {kw, lit, lparen, rparen}."""
+    toks: List[Tuple[str, str]] = []
+    i, n = 0, len(text)
+    while i < n:
+        c = text[i]
+        if c.isspace():
+            i += 1
+        elif c == "(":
+            toks.append(("lparen", c))
+            i += 1
+        elif c == ")":
+            toks.append(("rparen", c))
+            i += 1
+        elif c == "'":
+            j = text.find("'", i + 1)
+            if j < 0:
+                raise PredicateSyntaxError(f"unterminated quote at {i}")
+            toks.append(("lit", text[i + 1:j]))
+            i = j + 1
+        else:
+            j = i
+            while j < n and not text[j].isspace() and text[j] not in "()'":
+                j += 1
+            word = text[i:j]
+            toks.append(("kw", word) if word in _KEYWORDS else ("lit", word))
+            i = j
+    return toks
+
+
+class _Parser:
+    def __init__(self, toks: List[Tuple[str, str]]) -> None:
+        self.toks = toks
+        self.pos = 0
+
+    def peek(self) -> Optional[Tuple[str, str]]:
+        return self.toks[self.pos] if self.pos < len(self.toks) else None
+
+    def take(self) -> Tuple[str, str]:
+        if self.pos >= len(self.toks):
+            raise PredicateSyntaxError("unexpected end of predicate")
+        t = self.toks[self.pos]
+        self.pos += 1
+        return t
+
+    def expr(self) -> Predicate:
+        node = self.term()
+        children = [node]
+        while self.peek() == ("kw", "OR"):
+            self.take()
+            children.append(self.term())
+        return children[0] if len(children) == 1 else Or(children)
+
+    def term(self) -> Predicate:
+        node = self.factor()
+        children = [node]
+        while self.peek() == ("kw", "AND"):
+            self.take()
+            children.append(self.factor())
+        return children[0] if len(children) == 1 else And(children)
+
+    def factor(self) -> Predicate:
+        if self.peek() == ("kw", "NOT"):
+            self.take()
+            return Not(self.factor())
+        return self.atom()
+
+    def atom(self) -> Predicate:
+        kind, val = self.take()
+        if kind == "lparen":
+            node = self.expr()
+            if self.take()[0] != "rparen":
+                raise PredicateSyntaxError("expected ')'")
+            return node
+        if kind == "kw" and val == "LIKE":
+            k2, v2 = self.take()
+            if k2 != "lit":
+                raise PredicateSyntaxError("LIKE expects a pattern literal")
+            return Like(v2)
+        if kind == "kw" and val == "CONTAINS":
+            k2, v2 = self.take()
+            if k2 != "lit":
+                raise PredicateSyntaxError(
+                    "CONTAINS expects a pattern literal")
+            return Contains(v2)
+        if kind == "lit":
+            return Contains(val)
+        raise PredicateSyntaxError(f"unexpected token {val!r}")
+
+
+def parse_predicate(text: str) -> Predicate:
+    """Parse a request string.  Strings containing no predicate syntax
+    (no uppercase keyword, quote, or parenthesis) are CONTAINS patterns
+    taken verbatim — the pre-predicate request shape.  A literal pattern
+    that happens to contain a standalone uppercase keyword must be quoted
+    (``CONTAINS 'NOT A DRILL'``) or passed as ``Contains(...)``."""
+    if not isinstance(text, str):
+        return Contains(text)
+    if not (any(k in text for k in _KEYWORDS) or "'" in text
+            or "(" in text or ")" in text):
+        return Contains(text)
+    toks = _tokenize(text)
+    if not any(k == "kw" for k, _ in toks) and "'" not in text \
+            and "(" not in text:
+        return Contains(text)
+    p = _Parser(toks)
+    node = p.expr()
+    if p.peek() is not None:
+        raise PredicateSyntaxError(
+            f"trailing tokens after predicate: {p.toks[p.pos:]}")
+    return node
+
+
+def as_predicate(pattern) -> Predicate:
+    """Request shapes accepted everywhere: Predicate objects pass through,
+    strings go through the parser, any other sequence is CONTAINS."""
+    if isinstance(pattern, Predicate):
+        return pattern
+    if isinstance(pattern, str):
+        return parse_predicate(pattern)
+    return Contains(pattern)
+
+
+# ===================================================================== #
+# normalization
+# ===================================================================== #
+
+def _rewrite_like(p: Predicate) -> Predicate:
+    """LIKE patterns equivalent to CONTAINS lose their residual."""
+    if isinstance(p, Like):
+        c = p.as_contains()
+        return c if c is not None else p
+    if isinstance(p, And):
+        return And([_rewrite_like(c) for c in p.children])
+    if isinstance(p, Or):
+        return Or([_rewrite_like(c) for c in p.children])
+    if isinstance(p, Not):
+        return Not(_rewrite_like(p.child))
+    return p
+
+
+def _nnf(p: Predicate, neg: bool = False) -> Predicate:
+    """Negation normal form: NOT pushed onto leaves (De Morgan)."""
+    if isinstance(p, Not):
+        return _nnf(p.child, not neg)
+    if isinstance(p, And):
+        ch = [_nnf(c, neg) for c in p.children]
+        return Or(ch) if neg else And(ch)
+    if isinstance(p, Or):
+        ch = [_nnf(c, neg) for c in p.children]
+        return And(ch) if neg else Or(ch)
+    return Not(p) if neg else p
+
+
+def _flatten(p: Predicate) -> Predicate:
+    """And(And(..)) / Or(Or(..)) collapse; single-child nodes unwrap."""
+    if isinstance(p, And):
+        ch: List[Predicate] = []
+        for c in (_flatten(c) for c in p.children):
+            ch.extend(c.children if isinstance(c, And) else [c])
+        return ch[0] if len(ch) == 1 else And(ch)
+    if isinstance(p, Or):
+        ch = []
+        for c in (_flatten(c) for c in p.children):
+            ch.extend(c.children if isinstance(c, Or) else [c])
+        return ch[0] if len(ch) == 1 else Or(ch)
+    if isinstance(p, Not):
+        return Not(_flatten(p.child))
+    return p
+
+
+def normalize(p: Predicate) -> Predicate:
+    return _flatten(_nnf(_rewrite_like(p)))
+
+
+# ===================================================================== #
+# compiled representation
+# ===================================================================== #
+
+@dataclass
+class CompiledSource:
+    """One disjunct of a compiled predicate — what the executor runs."""
+    strategy: str                                # chain|scan|filtered_graph|residual
+    anchor: int = -1                             # anchor state (chain-backed)
+    segments: List[Tuple[int, int]] = field(default_factory=list)
+    raw_segments: List[Tuple[int, int]] = field(default_factory=list)
+    graph_states: List[int] = field(default_factory=list)
+    ids: Optional[np.ndarray] = None             # explicit candidate ids
+    allowed: Optional[np.ndarray] = None         # (n,) composed conjunct mask
+    verify: Optional[Predicate] = None           # residual host check
+    est: int = 0                                 # estimated |result|
+
+
+@dataclass
+class CompiledPredicate:
+    key: str
+    pred: Predicate
+    sources: List[CompiledSource]
+    est: int
+
+    @property
+    def empty(self) -> bool:
+        """Provably no sequence qualifies (pattern ∉ corpus, etc.)."""
+        return not self.sources
+
+
+# ===================================================================== #
+# compiler
+# ===================================================================== #
+
+class _Ctx:
+    """Per-compile scratch: cover/mask lookups against the packed CSR."""
+
+    def __init__(self, esam, runtime) -> None:
+        self.esam = esam
+        self.rt = runtime
+        self.n = len(runtime.vectors)
+        self._mask_cache: Dict[int, np.ndarray] = {}
+
+    def walk(self, pattern) -> int:
+        return self.esam.walk(pattern)
+
+    def cover(self, state: int):
+        return self.rt.chain_cover(state)
+
+    def cover_mask(self, state: int) -> np.ndarray:
+        m = self._mask_cache.get(state)
+        if m is None:
+            m = np.zeros(self.n, dtype=bool)
+            m[self.rt.chain_ids(state)] = True
+            self._mask_cache[state] = m
+        return m
+
+
+def _node_mask(node: Predicate, ctx: _Ctx) -> Tuple[np.ndarray, bool]:
+    """(superset mask of the node's members, exact?).  The mask is always a
+    *superset* of the true member set; ``exact`` marks it tight.  NNF input
+    (Not only wraps leaves)."""
+    if isinstance(node, Contains):
+        st = ctx.walk(node.pattern)
+        if st == -1:
+            return np.zeros(ctx.n, dtype=bool), True
+        return ctx.cover_mask(st), True
+    if isinstance(node, Like):
+        lits = node.literals()
+        if not lits:
+            return np.ones(ctx.n, dtype=bool), False
+        m = None
+        for lit in lits:
+            st = ctx.walk(lit)
+            if st == -1:                      # necessary literal absent
+                return np.zeros(ctx.n, dtype=bool), True
+            lm = ctx.cover_mask(st)
+            m = lm.copy() if m is None else (m & lm)
+        return m, False
+    if isinstance(node, Not):
+        m, exact = _node_mask(node.child, ctx)
+        if exact:
+            return ~m, True
+        # complement of a superset is not a superset — fall back to all
+        return np.ones(ctx.n, dtype=bool), False
+    if isinstance(node, And):
+        m = np.ones(ctx.n, dtype=bool)
+        exact = True
+        for c in node.children:
+            cm, ce = _node_mask(c, ctx)
+            m &= cm
+            exact &= ce
+        return m, exact
+    if isinstance(node, Or):
+        m = np.zeros(ctx.n, dtype=bool)
+        exact = True
+        for c in node.children:
+            cm, ce = _node_mask(c, ctx)
+            m |= cm
+            exact &= ce
+        return m, exact
+    raise TypeError(f"unknown predicate node {node!r}")
+
+
+def _contains_source(node: Contains, ctx: _Ctx) -> Optional[CompiledSource]:
+    st = ctx.walk(node.pattern)
+    if st == -1:
+        return None
+    cov = ctx.cover(st)
+    return CompiledSource(strategy="chain", anchor=st,
+                          segments=cov.segments,
+                          raw_segments=cov.raw_segments,
+                          graph_states=cov.graph_states, est=cov.size)
+
+
+def _mask_scan_source(mask: np.ndarray, exact: bool,
+                      node: Predicate) -> Optional[CompiledSource]:
+    ids = np.nonzero(mask)[0].astype(np.int64)
+    if len(ids) == 0:
+        return None
+    if exact:
+        return CompiledSource(strategy="scan", ids=ids, est=len(ids))
+    return CompiledSource(strategy="residual", ids=ids, verify=node,
+                          est=len(ids))
+
+
+def _and_source(node: And, ctx: _Ctx) -> Optional[CompiledSource]:
+    """Pick the smallest positive-CONTAINS conjunct as the anchor, compose
+    the remaining conjuncts into a membership mask, and choose scan vs
+    filtered-graph by surviving selectivity."""
+    anchors: List[Tuple[int, int, int]] = []     # (|cover|, child idx, state)
+    for i, c in enumerate(node.children):
+        if isinstance(c, Contains):
+            st = ctx.walk(c.pattern)
+            if st == -1:
+                return None                       # conjunction provably empty
+            anchors.append((ctx.cover(st).size, i, st))
+    if not anchors:
+        mask, exact = _node_mask(node, ctx)
+        return _mask_scan_source(mask, exact, node)
+    anchors.sort()
+    _, anchor_idx, anchor_state = anchors[0]
+    cov = ctx.cover(anchor_state)
+    allowed = np.ones(ctx.n, dtype=bool)
+    exact = True
+    for i, c in enumerate(node.children):
+        if i == anchor_idx:
+            continue
+        cm, ce = _node_mask(c, ctx)
+        allowed &= cm
+        exact &= ce
+    anchor_ids = ctx.rt.chain_ids(anchor_state)
+    keep = allowed[anchor_ids]
+    sel = int(keep.sum())
+    if sel == 0 and exact:
+        return None
+    if not exact:
+        ids = np.sort(anchor_ids[keep])
+        if len(ids) == 0:
+            return None
+        return CompiledSource(strategy="residual", anchor=anchor_state,
+                              ids=ids, verify=node, est=sel)
+    if cov.graph_states and sel >= max(
+            FILTERED_GRAPH_MIN_KEEP,
+            int(FILTERED_GRAPH_MIN_FRAC * cov.size)):
+        return CompiledSource(strategy="filtered_graph", anchor=anchor_state,
+                              segments=cov.segments,
+                              raw_segments=cov.raw_segments,
+                              graph_states=cov.graph_states,
+                              allowed=allowed, est=sel)
+    return CompiledSource(strategy="scan", anchor=anchor_state,
+                          ids=np.sort(anchor_ids[keep]), est=sel)
+
+
+def _like_source(node: Like, ctx: _Ctx) -> Optional[CompiledSource]:
+    lits = node.literals()
+    if not lits:
+        return CompiledSource(strategy="residual",
+                              ids=np.arange(ctx.n, dtype=np.int64),
+                              verify=node, est=ctx.n)
+    best_state, best_size = -1, -1
+    mask = None
+    for lit in lits:
+        st = ctx.walk(lit)
+        if st == -1:
+            return None
+        size = ctx.cover(st).size
+        if best_state == -1 or size < best_size:
+            best_state, best_size = st, size
+        lm = ctx.cover_mask(st)
+        mask = lm.copy() if mask is None else (mask & lm)
+    ids = np.nonzero(mask)[0].astype(np.int64)
+    if len(ids) == 0:
+        return None
+    return CompiledSource(strategy="residual", anchor=best_state, ids=ids,
+                          verify=node, est=len(ids))
+
+
+def _compile_disjunct(node: Predicate, ctx: _Ctx
+                      ) -> Optional[CompiledSource]:
+    if isinstance(node, Contains):
+        return _contains_source(node, ctx)
+    if isinstance(node, Like):
+        return _like_source(node, ctx)
+    if isinstance(node, And):
+        return _and_source(node, ctx)
+    if isinstance(node, Not):
+        mask, exact = _node_mask(node, ctx)
+        return _mask_scan_source(mask, exact, node)
+    if isinstance(node, Or):                       # nested Or after flatten
+        mask, exact = _node_mask(node, ctx)
+        return _mask_scan_source(mask, exact, node)
+    raise TypeError(f"unknown predicate node {node!r}")
+
+
+def compile_predicate(pred: Predicate, esam, runtime) -> CompiledPredicate:
+    """Lower ``pred`` to executable sources against a PackedRuntime.
+
+    Top-level OR splits into one source per disjunct; the executor merges
+    their results with id-dedup (a membership-bitmap union collapses pure
+    scan disjuncts into one deduplicated scan first).  Residual sources
+    require the runtime to carry the original sequences."""
+    pred = as_predicate(pred)
+    norm = normalize(pred)
+    ctx = _Ctx(esam, runtime)
+    disjuncts = norm.children if isinstance(norm, Or) else [norm]
+    sources = []
+    for d in disjuncts:
+        s = _compile_disjunct(d, ctx)
+        if s is not None:
+            sources.append(s)
+    sources = _fuse_scan_disjuncts(sources, ctx)
+    if any(s.verify is not None for s in sources):
+        seqs = getattr(runtime, "sequences", None)
+        if not seqs or len(seqs) != ctx.n:
+            raise ValueError(
+                "predicate needs residual verification but the runtime has "
+                "no stored sequences (rebuild or re-save the index with "
+                "sequences attached)")
+    est = min(ctx.n, sum(s.est for s in sources))
+    return CompiledPredicate(key=norm.key(), pred=norm, sources=sources,
+                             est=est)
+
+
+def _fuse_scan_disjuncts(sources: List[CompiledSource], ctx: _Ctx
+                         ) -> List[CompiledSource]:
+    """OR of brute-forced disjuncts: union the covers via one membership
+    bitmap so overlapping ids are scanned once, not once per disjunct.
+    Raw-only chains join the union (their covers often nest — V_'ab' ⊆
+    V_'a'); graph-backed chains keep their beam searches."""
+    def fusable(s: CompiledSource) -> bool:
+        return (s.strategy == "scan"
+                or (s.strategy == "chain" and not s.graph_states))
+    scans = [s for s in sources if fusable(s)]
+    if len(scans) < 2:
+        return sources
+    rest = [s for s in sources if not fusable(s)]
+    m = np.zeros(ctx.n, dtype=bool)
+    for s in scans:
+        if s.ids is not None:
+            m[s.ids] = True
+        else:
+            for lo, hi in s.segments:
+                m[ctx.rt.base_ids[lo:hi]] = True
+    ids = np.nonzero(m)[0].astype(np.int64)
+    if len(ids) == 0:
+        return rest
+    return rest + [CompiledSource(strategy="scan", ids=ids, est=len(ids))]

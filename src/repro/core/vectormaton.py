@@ -10,14 +10,19 @@ Build (Algorithm 3 Build):
        - skip-build: |base(u)| < T  ->  raw ID set (brute-force at query
          time); otherwise an HNSW graph over base(u).
 
-Query (Algorithm 3 Query): handled by the planner/executor runtime
-(core/packed.py, DESIGN.md §3).  At finalize time the chain structure and
+Query (Algorithm 3 Query, extended to boolean predicates): handled by the
+predicate compiler + planner/executor runtime (core/predicate.py,
+core/packed.py, DESIGN.md §3).  At finalize time the chain structure and
 per-state indexes are flattened into struct-of-arrays form (CSR base-ID
-segments + padded graph matrices, uploaded to device once); at query time a
-host planner walks the automaton per request and coalesces identical-state
-requests, and a batched executor answers all raw segments with ONE segmented
-fused distance+top-k launch and all shared graphs with vmapped beam
-searches.  ``query`` is the single-request special case of ``query_batch``.
+segments + padded graph matrices, uploaded to device once); at query time
+each request's predicate — a plain CONTAINS pattern or an AND/OR/NOT/LIKE
+string — compiles to per-disjunct execution sources (chain / scan /
+filtered-graph / residual), identical predicates coalesce, and a batched
+executor answers all brute-forced candidate sets with ONE segmented fused
+distance+top-k launch, all shared graphs with vmapped (optionally
+bitmap-filtered) beam searches, and residual LIKEs with an over-fetch +
+host-verify loop.  ``query`` is the single-request special case of
+``query_batch``.
 
 Maintenance (paper §5): online insert extends the automaton and patches the
 affected base indexes without a global rebuild; deletes are lazy marks
@@ -40,6 +45,8 @@ import numpy as np
 from .esam import ESAM, ROOT
 from .hnsw import HNSW
 from .packed import PackedRuntime, QueryPlan
+from .predicate import CompiledPredicate, Predicate, as_predicate, \
+    compile_predicate
 
 _RAW = 0
 _HNSW = 1
@@ -55,6 +62,7 @@ class VectorMatonConfig:
     skip_build: bool = True      # skip-build strategy (ablation switch)
     seed: int = 0
     backend: str = "numpy"       # 'numpy' host path | 'jax' device path
+    quantize: str = "none"       # 'sq8': int8 scan + fp32 rerank raw path
 
 
 @dataclass
@@ -86,6 +94,7 @@ class VectorMaton:
         self.inherit: List[int] = []
         self.state_index: List[Optional[_StateIndex]] = []
         self.deleted: set = set()
+        self.sequences: List = list(sequences)   # LIKE residual verification
         self._lock = threading.Lock()
         for s in sequences:
             self.esam.add_sequence(s)
@@ -207,27 +216,53 @@ class VectorMaton:
         """Invalidate after a structural change (insert / promotion)."""
         self._runtime = None
 
-    def plan(self, patterns: Sequence[Sequence]) -> QueryPlan:
-        """Walk the automaton per request and coalesce identical-state
-        requests into one plan entry each (the host planner half)."""
-        return self.runtime.plan([self.esam.walk(p) for p in patterns])
+    _PRED_CACHE_MAX = 256        # entries can hold O(n) id arrays/masks
 
-    def query(self, v_q: np.ndarray, pattern: Sequence, k: int,
+    def compile(self, pattern) -> CompiledPredicate:
+        """Lower a request pattern — a plain CONTAINS pattern, a predicate
+        string (``"ab AND NOT LIKE 'c%d'"``), or a ``Predicate`` — to
+        executable sources.  Compiled predicates are cached per runtime
+        flattening (inserts rebuild the runtime and so invalidate them;
+        deletes are tombstone-filtered at execute time and don't).  The
+        cache is bounded: compiled boolean sources carry O(n) id arrays,
+        so a serving stream of ever-distinct predicates must not grow it
+        without bound (FIFO eviction; coalescing only needs the batch's
+        working set)."""
+        pred = as_predicate(pattern)
+        rt = self.runtime
+        key = pred.key()
+        cp = rt._pred_cache.get(key)
+        if cp is None:
+            cp = compile_predicate(pred, self.esam, rt)
+            while len(rt._pred_cache) >= self._PRED_CACHE_MAX:
+                rt._pred_cache.pop(next(iter(rt._pred_cache)))
+            rt._pred_cache[key] = cp
+        return cp
+
+    def plan(self, patterns: Sequence) -> QueryPlan:
+        """Compile each request's predicate and coalesce identical
+        predicates into one plan entry each (the host planner half)."""
+        return self.runtime.plan([self.compile(p) for p in patterns])
+
+    def query(self, v_q: np.ndarray, pattern, k: int,
               ef_search: int = 64) -> Tuple[np.ndarray, np.ndarray]:
         """Top-k (distances, global ids) among vectors whose sequence
-        contains ``pattern``.  Empty pattern == unconstrained ANN.
+        satisfies ``pattern`` — a CONTAINS pattern, predicate string, or
+        ``Predicate`` AST.  Empty pattern == unconstrained ANN.
         Single-request special case of ``query_batch``."""
         return self.query_batch(
             np.asarray(v_q, dtype=np.float32)[None, :], [pattern], k,
             ef_search=ef_search)[0]
 
     def query_batch(self, queries: np.ndarray,
-                    patterns: Sequence[Sequence], k: int,
+                    patterns: Sequence, k: int,
                     ef_search: int = 64
                     ) -> List[Tuple[np.ndarray, np.ndarray]]:
-        """Batched query path: plan once per distinct pattern state, then
-        one segmented device sweep for all raw segments + one vmapped beam
-        search per shared graph.  Returns [(dists, ids)] per request."""
+        """Batched query path: compile+plan once per distinct predicate,
+        then one segmented device sweep for all brute-forced candidate
+        sets + one vmapped beam search per shared graph (+ residual
+        verification loops for multi-segment LIKE).  Returns
+        [(dists, ids)] per request."""
         return self.runtime.execute(queries, self.plan(patterns), k,
                                     ef_search=ef_search)
 
@@ -241,6 +276,7 @@ class VectorMaton:
         clones rebuild their base against the current best successor —
         correctness over size-optimality, as in the paper's online update."""
         i = self.esam.num_sequences
+        self.sequences.append(sequence)
         self.vectors = np.concatenate(
             [self.vectors, np.asarray(vector, np.float32)[None, :]], axis=0)
         for si in self.state_index:

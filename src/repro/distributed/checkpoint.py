@@ -41,6 +41,11 @@ def save_vectormaton(vm, path: str) -> None:
     np.savez_compressed(os.path.join(tmp, "esam.npz"),
                         **{k: v for k, v in vm.esam.to_arrays().items()})
     np.save(os.path.join(tmp, "vectors.npy"), vm.vectors)
+    # original sequences: required for LIKE residual verification after a
+    # restore (predicates re-compile against the restored runtime)
+    np.save(os.path.join(tmp, "sequences.npy"),
+            np.asarray(list(getattr(vm, "sequences", [])), dtype=object),
+            allow_pickle=True)
     # state indexes: raw sets into one CSR; graphs into per-state npz
     raw_ptr = [0]
     raw_data: List[np.ndarray] = []
@@ -72,7 +77,9 @@ def save_vectormaton(vm, path: str) -> None:
         config=np.asarray([vm.config.T, vm.config.M, vm.config.ef_con,
                            0 if vm.config.metric == "l2" else 1,
                            int(vm.config.reuse), int(vm.config.skip_build),
-                           vm.config.seed], dtype=np.int64))
+                           vm.config.seed,
+                           0 if getattr(vm.config, "quantize", "none")
+                           == "none" else 1], dtype=np.int64))
     if os.path.exists(path):
         shutil.rmtree(path)
     os.replace(tmp, path)
@@ -90,10 +97,15 @@ def load_vectormaton(cls, path: str):
     config = VectorMatonConfig(
         T=int(cfg_arr[0]), M=int(cfg_arr[1]), ef_con=int(cfg_arr[2]),
         metric="l2" if cfg_arr[3] == 0 else "ip", reuse=bool(cfg_arr[4]),
-        skip_build=bool(cfg_arr[5]), seed=int(cfg_arr[6]))
+        skip_build=bool(cfg_arr[5]), seed=int(cfg_arr[6]),
+        quantize=("sq8" if len(cfg_arr) > 7 and cfg_arr[7] == 1
+                  else "none"))
     vm = cls.__new__(cls)
     vm.config = config
     vm.vectors = np.load(os.path.join(path, "vectors.npy"))
+    seq_path = os.path.join(path, "sequences.npy")
+    vm.sequences = (np.load(seq_path, allow_pickle=True).tolist()
+                    if os.path.exists(seq_path) else [])
     vm.esam = ESAM.from_arrays(esam_arrays)
     vm.esam.finalize()
     vm.inherit = states["inherit"].tolist()
@@ -114,8 +126,20 @@ def load_vectormaton(cls, path: str):
                 vm.vectors,
                 dict(np.load(os.path.join(path, f"graph_{u}.npz"))))
             vm.state_index.append(_StateIndex(_HNSW, graph=g))
+    # Re-apply tombstones into every per-state graph whose base contains a
+    # deleted id.  Graphs persist their own deleted sets, but a checkpoint
+    # written by an older saver (or edited by hand) may carry the global
+    # set only — the union is idempotent and restores the invariant that
+    # graph searches skip tombstones in-scan.
+    if vm.deleted:
+        for idx in vm.state_index:
+            if idx is not None and idx.kind == _HNSW:
+                for vid in vm.deleted & set(int(x) for x in idx.graph.ids):
+                    idx.graph.mark_deleted(vid)
     # restored indexes flatten straight back into the packed query runtime —
-    # no rebuild, same restart path the serving tier uses after a failure
+    # no rebuild, same restart path the serving tier uses after a failure;
+    # the rebuilt runtime re-derives the device tombstone mask from
+    # vm.deleted at to_device() time
     vm._refresh_runtime()
     return vm
 

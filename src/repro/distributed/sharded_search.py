@@ -9,10 +9,13 @@ per query batch — negligible against the distance compute, which is why
 brute-force pattern-constrained search scales linearly in chips.
 
 State-index semantics: `sharded_plan_topk` consumes a QueryPlan from the
-packed runtime's planner (core/packed.py) — each plan entry's chain CSR
-segments ARE the qualified subset V_p (Lemma 4), turned into a dense
-validity mask per entry; same-state requests share one sharded sweep.
-`sharded_topk` below is the raw numeric primitive.
+packed runtime's planner (core/packed.py) — each plan entry's compiled
+predicate is composed into a dense per-entry validity mask
+(`PackedRuntime.entry_mask`: chain CSR covers for CONTAINS, bitmap
+unions/intersections for OR/AND/NOT, residual LIKE verification applied
+host-side), so the sharded sweep answers arbitrary boolean predicates
+exactly; same-predicate requests share one sharded sweep.  `sharded_topk`
+below is the raw numeric primitive.
 """
 
 from __future__ import annotations
@@ -93,10 +96,12 @@ def sharded_plan_topk(mesh: Mesh, base: jax.Array, runtime, queries,
 
     ``runtime`` is the PackedRuntime whose CSR the plan indexes into;
     ``plan`` comes from ``runtime.plan(...)`` / ``VectorMaton.plan(...)``.
-    For each coalesced entry the full chain cover (raw + graph segments —
-    exactly V_p) becomes a validity mask, and ALL of the entry's requests
-    run through one sharded fused sweep.  Returns [(dists, ids)] aligned
-    with the request batch; tombstoned IDs never win.
+    For each coalesced entry the compiled predicate's exact membership
+    (``runtime.entry_mask`` — chain covers, boolean bitmap composition,
+    residual LIKE verification) becomes the per-entry validity mask, and
+    ALL of the entry's requests run through one sharded fused sweep.
+    Returns [(dists, ids)] aligned with the request batch; tombstoned IDs
+    never win.
     """
     import numpy as np
     n = base.shape[0]
@@ -105,10 +110,9 @@ def sharded_plan_topk(mesh: Mesh, base: jax.Array, runtime, queries,
            ] * plan.n_requests
     deleted = runtime.deleted
     for entry in plan.entries:
-        mask = np.zeros(n, dtype=bool)
-        for lo, hi in entry.segments:
-            seg = runtime.base_ids[lo:hi]
-            mask[seg[seg < n]] = True
+        mask = runtime.entry_mask(entry)[:n]
+        if len(mask) < n:
+            mask = np.pad(mask, (0, n - len(mask)))
         if deleted:
             mask[[i for i in deleted if i < n]] = False
         with mesh:

@@ -134,7 +134,12 @@ def topk_sq8_rerank(x: jax.Array, y: jax.Array, k: int, *,
         interpret = not _on_tpu()
     qn, d = x.shape
     n = y.shape[0]
-    kq = min(max(k * overfetch, k), 128)
+    kq = max(k * overfetch, k)
+    if kq > 128:
+        raise ValueError(
+            f"k*overfetch={kq} exceeds the quantized kernel's 128-lane "
+            f"scratch budget (k={k}, overfetch={overfetch}); lower k or "
+            f"overfetch (the executor clamps overfetch to 128//k)")
     xq, sx, x2 = quantize_sq8(x)
     yq, sy, y2 = quantize_sq8(y)
     qp = _round_up(max(qn, 1), BLOCK_Q)

@@ -1,11 +1,13 @@
 """Continuous-batching request scheduler (beyond-paper serving substrate).
 
 Pattern-constrained queries have wildly variable cost (chain length ×
-state sizes).  A fixed batch ties P50 latency to the slowest request; the
-scheduler below keeps a bounded in-flight window, admits by arrival order
-with a cost model (|V_p| from the automaton walk — available *before* any
-distance work), and coalesces same-state requests so the chain walk and
-the fused brute-force kernel run once per state per wave.
+state sizes × boolean structure).  A fixed batch ties P50 latency to the
+slowest request; the scheduler below keeps a bounded in-flight window,
+admits by arrival order with a cost model (the predicate compiler's
+selectivity estimate from |V_state| — available *before* any distance
+work), and coalesces same-predicate requests so compilation and the fused
+brute-force kernel run once per predicate per wave.  Requests carry
+predicate strings (``"ab AND NOT LIKE 'c%d'"``) or plain patterns alike.
 
 This is the host-side analogue of LLM continuous batching: the automaton
 walk is the "prefill" (µs, host), the distance work is the "decode"
@@ -29,7 +31,7 @@ class _Queued:
     sort_key: Tuple
     seq: int = field(compare=False)
     request: Request = field(compare=False)
-    state: int = field(compare=False)
+    key: object = field(compare=False)       # canonical predicate key
     cost: int = field(compare=False)
     t_arrival: float = field(compare=False)
 
@@ -55,13 +57,14 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> int:
-        """Returns a ticket id."""
-        st = self.engine.index.esam.walk(req.pattern)
-        cost = (len(self.engine.index.esam.state_ids(st)) if st != -1
-                else 0)
+        """Returns a ticket id.  The admission cost is the predicate
+        compiler's selectivity estimate (Σ|V_state| over the compiled
+        sources) — boolean predicates are priced by the candidate rows
+        their strategies will actually touch."""
+        cp = self.engine.index.compile(req.pattern)
         t = time.perf_counter()
-        q = _Queued(sort_key=(t,), seq=self._seq, request=req, state=st,
-                    cost=cost, t_arrival=t)
+        q = _Queued(sort_key=(t,), seq=self._seq, request=req, key=cp.key,
+                    cost=cp.est, t_arrival=t)
         heapq.heappush(self._queue, q)
         self._seq += 1
         return q.seq

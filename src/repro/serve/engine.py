@@ -6,10 +6,15 @@ The end-to-end composition the paper targets: an encoder LM produces
 
 Request flow (DESIGN.md §3):
   embed (batched, jit'd mean-pool over LM hidden states)
-    -> planner: automaton walk per request (µs-scale host work), identical
-       pattern states coalesced into one plan entry
+    -> planner: predicate compile + automaton walks per request (µs-scale
+       host work), identical predicates coalesced into one plan entry
     -> batched executor: ONE segmented fused distance+top-k launch for all
-       raw segments in the batch + one vmapped beam search per shared graph.
+       brute-forced candidate sets in the batch + one vmapped beam search
+       per shared graph (bitmap-filtered for conjunctions) + residual
+       verification loops for multi-segment LIKE.
+
+Requests accept predicate strings — ``"ab AND NOT (cd OR LIKE 'a%b_')"``
+— as well as plain CONTAINS patterns (parsed in core/predicate.py).
 """
 
 from __future__ import annotations
@@ -26,7 +31,8 @@ from ..core.vectormaton import VectorMaton, VectorMatonConfig
 @dataclass
 class Request:
     vector: np.ndarray
-    pattern: str
+    pattern: str        # CONTAINS pattern or boolean predicate string,
+                        # e.g. "ab AND NOT (cd OR LIKE 'a%b_')"
     k: int = 10
     ef_search: int = 64
 
@@ -57,9 +63,9 @@ class RetrievalEngine:
     def serve_batch(self, reqs: Sequence[Request]) -> List[Response]:
         """Cross-request batched execution: requests are grouped by
         (k, ef_search) and handed to ``VectorMaton.query_batch``, whose
-        planner coalesces same-state requests so the chain walk happens once
-        per distinct state and the distance work runs as one batched device
-        sweep instead of one call per request."""
+        planner coalesces same-predicate requests so compilation happens
+        once per distinct predicate and the distance work runs as one
+        batched device sweep instead of one call per request."""
         out: List[Optional[Response]] = [None] * len(reqs)
         groups: Dict[Tuple[int, int], List[int]] = {}
         for idx, r in enumerate(reqs):

@@ -178,6 +178,35 @@ def test_insert_promotes_raw_to_graph(dataset):
     assert len(got) == 5
 
 
+def test_promotion_batched_query_parity(dataset):
+    """Insert past 4*T (raw -> HNSW promotion), then verify the BATCHED
+    path against per-request queries and the brute-force subset — the
+    promotion path previously had no batched-query coverage."""
+    vecs, seqs = dataset
+    vm = _build(dataset, T=5)
+    dim = vecs.shape[1]
+    rng = np.random.default_rng(12)
+    assert vm.esam.walk("zz") == -1
+    n_ins = 4 * vm.config.T + 3
+    ids = [vm.insert(rng.standard_normal(dim).astype(np.float32), "zz")
+           for _ in range(n_ins)]
+    chain = vm._chain(vm.esam.walk("zz"))
+    assert _HNSW in [vm.state_index[u].kind for u in chain]
+    pats = ["zz", "z", "zz", "a", "zz"]       # promoted state coalesces
+    queries = rng.standard_normal((len(pats), dim)).astype(np.float32)
+    plan = vm.plan(pats)
+    assert plan.coalesced >= 2
+    batched = vm.query_batch(queries, pats, 6, ef_search=64)
+    for r, p in enumerate(pats):
+        d, i = vm.query(queries[r], p, 6, ef_search=64)
+        assert np.array_equal(i, batched[r][1]), p
+        np.testing.assert_allclose(d, batched[r][0], rtol=1e-6)
+    # promoted-state results stay inside the inserted subset
+    for r in (0, 2, 4):
+        assert set(batched[r][1].tolist()) <= set(ids)
+        assert len(batched[r][1]) == 6
+
+
 def test_runtime_rebuilt_after_insert(dataset):
     vecs, seqs = dataset
     vm = _build(dataset, T=25)

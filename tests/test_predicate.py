@@ -1,0 +1,334 @@
+"""Predicate layer: parser, compiler strategy selection, and the
+brute-force oracle (acceptance: any AST of depth ≤ 3 returns exactly the
+brute-force top-k over sequences satisfying the predicate)."""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
+
+from repro.core.predicate import (And, Contains, Like, Not, Or,
+                                  PredicateSyntaxError, as_predicate,
+                                  normalize, parse_predicate)
+from repro.core.vectormaton import VectorMaton, VectorMatonConfig
+
+
+# --------------------------------------------------------------------- #
+# parser
+# --------------------------------------------------------------------- #
+
+def test_parse_plain_pattern_is_contains_verbatim():
+    for s in ["ab", "hello world", "a b c", "and or not"]:  # lowercase ok
+        p = parse_predicate(s)
+        assert isinstance(p, Contains) and p.pattern == s
+
+
+def test_parse_boolean_structure():
+    p = parse_predicate("ab AND cd")
+    assert isinstance(p, And) and [c.pattern for c in p.children] == \
+        ["ab", "cd"]
+    p = parse_predicate("ab OR cd AND ef")      # AND binds tighter
+    assert isinstance(p, Or)
+    assert isinstance(p.children[1], And)
+    p = parse_predicate("(ab OR cd) AND ef")
+    assert isinstance(p, And) and isinstance(p.children[0], Or)
+    p = parse_predicate("NOT ab")
+    assert isinstance(p, Not) and p.child.pattern == "ab"
+
+
+def test_parse_like_and_quotes():
+    p = parse_predicate("LIKE 'a%b_c'")
+    assert isinstance(p, Like) and p.pattern == "a%b_c"
+    p = parse_predicate("CONTAINS 'with space' AND LIKE '%x%'")
+    assert isinstance(p, And)
+    assert p.children[0].pattern == "with space"
+
+
+def test_parse_errors():
+    with pytest.raises(PredicateSyntaxError):
+        parse_predicate("ab AND")
+    with pytest.raises(PredicateSyntaxError):
+        parse_predicate("(ab OR cd")
+    with pytest.raises(PredicateSyntaxError):
+        parse_predicate("LIKE 'unterminated")
+
+
+def test_operator_sugar_and_keys():
+    p = Contains("a") & ~Contains("b") | Like("%c%")
+    assert isinstance(p, Or)
+    assert p.key() == parse_predicate("a AND NOT b OR LIKE '%c%'").key()
+
+
+def test_like_semantics():
+    assert Like("a%").matches("abc")
+    assert not Like("a%").matches("ba")
+    assert Like("%a_c%").matches("xxabcyy")
+    assert not Like("%a_c%").matches("xxacyy")
+    assert Like("%").matches("")
+    assert Like("a%b%c").matches("axxbyyc")
+    assert not Like("a%b%c").matches("axxbyy")
+    assert Like("%ab%").as_contains().pattern == "ab"
+    assert Like("a%b").as_contains() is None
+    assert Like("%a%b%").literals() == ["a", "b"]
+    assert normalize(Like("%ab%")).key() == Contains("ab").key()
+
+
+def test_like_empty_pattern_matches_only_empty_sequence():
+    """Regression: LIKE '' must NOT rewrite to the match-all CONTAINS ''
+    — it matches exactly the empty sequence."""
+    assert Like("").matches("")
+    assert not Like("").matches("a")
+    assert Like("").as_contains() is None
+    assert Like("%").as_contains().pattern == ""
+    seqs = ["", "a", "ab"]
+    vecs = np.eye(3, 4, dtype=np.float32)
+    vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=10 ** 9))
+    d, i = vm.query(np.zeros(4, np.float32), Like(""), 3)
+    assert i.tolist() == [0]
+    d, i = vm.query(np.zeros(4, np.float32), "LIKE '%'", 3)
+    assert len(i) == 3
+
+
+def test_pred_cache_bounded():
+    seqs = ["ab", "ba", "aa"]
+    vecs = np.eye(3, 4, dtype=np.float32)
+    vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=10 ** 9))
+    for j in range(2 * vm._PRED_CACHE_MAX):
+        vm.compile(Contains("a") & Contains("b" * (j % 7 + 1)))
+    assert len(vm.runtime._pred_cache) <= vm._PRED_CACHE_MAX
+
+
+def test_nnf_pushes_not_to_leaves():
+    p = normalize(Not(And([Contains("a"), Not(Contains("b"))])))
+    assert isinstance(p, Or)
+    assert isinstance(p.children[0], Not)
+    assert isinstance(p.children[1], Contains)
+
+
+# --------------------------------------------------------------------- #
+# compiler + executor oracle
+# --------------------------------------------------------------------- #
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(17)
+    n = 260
+    seqs = ["".join(rng.choice(list("abcd"),
+                               size=rng.integers(5, 16))) for _ in range(n)]
+    vecs = rng.standard_normal((n, 18)).astype(np.float32)
+    return vecs, seqs
+
+
+PREDICATES = [
+    "ab",
+    "ab AND cd",
+    "ab OR cd",
+    "NOT ab",
+    "ab AND NOT cd",
+    "NOT (ab OR cd)",
+    "(ab OR cd) AND NOT da",
+    "(a AND b) OR (c AND d)",
+    "LIKE '%ab%'",
+    "LIKE 'a%'",
+    "LIKE '%d'",
+    "LIKE '%a%b%'",
+    "LIKE '%a_c%'",
+    "NOT LIKE '%ab%'",
+    "ab AND LIKE '%c%d%'",
+    "LIKE 'a%' OR NOT LIKE '%b%'",
+]
+
+
+def _brute(vecs, seqs, pred, q, k):
+    ids = [i for i, s in enumerate(seqs) if pred.matches(s)]
+    if not ids:
+        return []
+    d = ((vecs[ids] - q) ** 2).sum(1)
+    order = np.argsort(d, kind="stable")[:k]
+    return [ids[i] for i in order]
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_oracle_raw_only(corpus, backend):
+    """Raw-only index (T = ∞): every strategy the compiler can emit is an
+    exact scan/residual, so query_batch must equal brute force exactly."""
+    vecs, seqs = corpus
+    vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=10 ** 9,
+                                                   backend=backend))
+    rng = np.random.default_rng(0)
+    queries = rng.standard_normal((len(PREDICATES),
+                                   vecs.shape[1])).astype(np.float32)
+    results = vm.query_batch(queries, PREDICATES, 7)
+    for r, ptxt in enumerate(PREDICATES):
+        want = _brute(vecs, seqs, parse_predicate(ptxt), queries[r], 7)
+        got = results[r][1].tolist()
+        assert got == want, (backend, ptxt, got, want)
+
+
+def test_oracle_matches_single_request_path(corpus):
+    """query == query_batch for boolean predicates (plan-contract parity)."""
+    vecs, seqs = corpus
+    vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=10 ** 9))
+    rng = np.random.default_rng(1)
+    pats = ["ab AND cd", "ab AND cd", "NOT ab", "LIKE '%a%b%'", "zz"]
+    queries = rng.standard_normal((len(pats),
+                                   vecs.shape[1])).astype(np.float32)
+    batched = vm.query_batch(queries, pats, 6)
+    for r, p in enumerate(pats):
+        d, i = vm.query(queries[r], p, 6)
+        assert np.array_equal(i, batched[r][1]), p
+        np.testing.assert_allclose(d, batched[r][0], rtol=1e-6)
+
+
+def test_plan_coalesces_equivalent_predicates(corpus):
+    vecs, seqs = corpus
+    vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=10 ** 9))
+    plan = vm.plan(["ab AND cd", "ab AND cd", "LIKE '%ab%'", "ab",
+                    "zzzz AND ab"])
+    # 'LIKE %ab%' normalizes to CONTAINS ab and coalesces with the plain
+    # pattern; the impossible conjunction is a miss
+    keys = [e.key for e in plan.entries]
+    assert len(keys) == len(set(keys)) == 2
+    assert plan.misses == [4]
+    assert plan.coalesced == 2
+
+
+def test_strategy_selection(corpus):
+    vecs, seqs = corpus
+    # small T -> dense patterns get graph-backed chains
+    vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=10, M=8, ef_con=40))
+    st = vm.plan(["a"]).strategies
+    assert st["chain"] == 1
+    # high-selectivity conjunction over a graph-backed anchor -> filtered
+    # beam search; low-selectivity -> scan of the composed intersection
+    st = vm.plan(["a AND b"]).strategies
+    assert st["filtered_graph"] == 1
+    st = vm.plan(["a AND abcd"]).strategies      # tiny anchor cover
+    assert st.get("filtered_graph", 0) == 0
+    st = vm.plan(["LIKE '%a%b%'"]).strategies
+    assert st["residual"] == 1
+    st = vm.plan(["NOT a"]).strategies
+    assert st["scan"] == 1
+
+
+def test_filtered_graph_recall(corpus):
+    """Conjunctions routed through the in-loop bitmap beam search hold
+    recall against brute force on both backends."""
+    vecs, seqs = corpus
+    rng = np.random.default_rng(3)
+    q = rng.standard_normal(vecs.shape[1]).astype(np.float32)
+    want = _brute(vecs, seqs, parse_predicate("a AND b"), q, 10)
+    for backend in ("numpy", "jax"):
+        vm = VectorMaton(vecs, seqs,
+                         VectorMatonConfig(T=10, M=8, ef_con=60,
+                                           backend=backend))
+        assert vm.plan(["a AND b"]).strategies["filtered_graph"] == 1
+        d, i = vm.query(q, "a AND b", 10, ef_search=128)
+        rec = len(set(i.tolist()) & set(want)) / max(1, len(want))
+        assert rec >= 0.8, (backend, i.tolist(), want)
+
+
+def test_residual_overfetch_refetches(corpus):
+    """A prefilter whose nearest members mostly fail verification forces
+    the over-fetch loop to grow m — results must still be exact."""
+    vecs, seqs = corpus
+    vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=10 ** 9))
+    rng = np.random.default_rng(4)
+    q = rng.standard_normal(vecs.shape[1]).astype(np.float32)
+    # anchored LIKE: prefilter is CONTAINS 'a' (dense), verification keeps
+    # only sequences *starting* with 'a' (sparse) -> heavy over-fetch
+    pred = parse_predicate("LIKE 'a%'")
+    d, i = vm.query(q, pred, 10)
+    want = _brute(vecs, seqs, pred, q, 10)
+    assert i.tolist() == want
+
+
+def test_entry_mask_is_exact(corpus):
+    """The distributed path's validity mask == true predicate membership."""
+    vecs, seqs = corpus
+    vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=25, M=8, ef_con=40))
+    for ptxt in PREDICATES:
+        plan = vm.plan([ptxt])
+        pred = parse_predicate(ptxt)
+        want = np.asarray([pred.matches(s) for s in seqs])
+        if not plan.entries:
+            assert not want.any(), ptxt
+            continue
+        got = vm.runtime.entry_mask(plan.entries[0])
+        assert np.array_equal(got, want), ptxt
+
+
+def test_residual_requires_sequences(corpus):
+    vecs, seqs = corpus
+    vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=10 ** 9))
+    vm.runtime.sequences = []            # simulate a legacy checkpoint
+    with pytest.raises(ValueError, match="sequences"):
+        vm.compile("LIKE '%a%b%'")
+
+
+def test_predicates_through_serving(corpus):
+    from repro.serve.batching import ContinuousBatcher
+    from repro.serve.engine import Request, RetrievalEngine
+    vecs, seqs = corpus
+    eng = RetrievalEngine(vecs, seqs, VectorMatonConfig(T=25, M=8,
+                                                        ef_con=40))
+    rng = np.random.default_rng(5)
+    pats = ["ab AND cd", "LIKE '%a%b%'", "NOT ab", "ab AND cd"]
+    reqs = [Request(vector=rng.standard_normal(vecs.shape[1]
+                                               ).astype(np.float32),
+                    pattern=p, k=5) for p in pats]
+    resps = eng.serve_batch(reqs)
+    for req, resp in zip(reqs, resps):
+        pred = parse_predicate(req.pattern)
+        assert all(pred.matches(seqs[i]) for i in resp.ids.tolist())
+        single = eng.serve(req)
+        assert np.array_equal(single.ids, resp.ids)
+    b = ContinuousBatcher(eng, budget=10 ** 6)
+    tickets = {b.submit(r): r for r in reqs}
+    served = b.drain()
+    assert set(served) == set(tickets)
+    for tid, resp in served.items():
+        pred = parse_predicate(tickets[tid].pattern)
+        assert all(pred.matches(seqs[i]) for i in resp.ids.tolist())
+
+
+# --------------------------------------------------------------------- #
+# property test: random ASTs of depth ≤ 3 vs brute force (skippable)
+# --------------------------------------------------------------------- #
+
+if HAS_HYPOTHESIS:
+    _leaf = st.one_of(
+        st.text(alphabet="ab", min_size=1, max_size=3).map(Contains),
+        st.text(alphabet="ab%_", min_size=1, max_size=4).map(Like))
+
+    def _tree(depth):
+        if depth == 0:
+            return _leaf
+        sub = _tree(depth - 1)
+        return st.one_of(
+            _leaf,
+            st.lists(sub, min_size=2, max_size=3).map(And),
+            st.lists(sub, min_size=2, max_size=3).map(Or),
+            sub.map(Not))
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.text(alphabet="ab", min_size=1, max_size=8),
+                    min_size=3, max_size=12),
+           _tree(2))
+    def test_random_predicates_match_bruteforce(seqs, pred):
+        rng = np.random.default_rng(len(seqs))
+        vecs = rng.standard_normal((len(seqs), 8)).astype(np.float32)
+        vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=10 ** 9))
+        q = rng.standard_normal(8).astype(np.float32)
+        d, ids = vm.query(q, pred, 3)
+        want = _brute(vecs, seqs, pred, q, 3)
+        assert ids.tolist() == want, (pred.key(), ids.tolist(), want)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed "
+                             "(pip install -r requirements-dev.txt)")
+    def test_random_predicates_match_bruteforce():
+        pass

@@ -32,6 +32,49 @@ def test_sq8_rerank_recall(q, n, d, k):
                 < 1e-2
 
 
+def test_sq8_rerank_overfetch_cap_raises():
+    """k·overfetch beyond the 128-lane scratch budget must be a clear
+    error, not a silent cap (the old behaviour quietly truncated the
+    candidate pool and degraded recall)."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 32)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((300, 32)).astype(np.float32))
+    with pytest.raises(ValueError, match="128-lane"):
+        topk_sq8_rerank(x, y, 64, overfetch=4)
+    v, i = topk_sq8_rerank(x, y, 32, overfetch=4)    # == 128: still legal
+    assert v.shape == (2, 32)
+
+
+def test_sq8_executor_backend():
+    """VectorMatonConfig.quantize='sq8' routes raw candidate sets through
+    the quantized scan + fp32 rerank; recall vs the fp32 executor stays
+    high and returned distances are exact fp32."""
+    from repro.core.vectormaton import VectorMaton
+    rng = np.random.default_rng(2)
+    n, dim = 300, 64
+    seqs = ["".join(rng.choice(list("abcd"), size=rng.integers(5, 14)))
+            for _ in range(n)]
+    vecs = rng.standard_normal((n, dim)).astype(np.float32)
+    vm_fp = VectorMaton(vecs, seqs, VectorMatonConfig(T=10 ** 9,
+                                                      backend="jax"))
+    vm_q8 = VectorMaton(vecs, seqs, VectorMatonConfig(T=10 ** 9,
+                                                      backend="jax",
+                                                      quantize="sq8"))
+    assert vm_q8.runtime.quantize == "sq8"
+    queries = rng.standard_normal((4, dim)).astype(np.float32)
+    pats = ["a", "ab", "a", "cd"]
+    r_fp = vm_fp.query_batch(queries, pats, 8)
+    r_q8 = vm_q8.query_batch(queries, pats, 8)
+    for (df, idf), (dq, idq), p in zip(r_fp, r_q8, pats):
+        overlap = len(set(idf.tolist()) & set(idq.tolist())) / len(idf)
+        assert overlap >= 0.8, (p, idf, idq)
+    # rerank distances are exact fp32 for every returned candidate
+    for r, (dq, idq) in enumerate(r_q8):
+        for dist, gid in zip(dq.tolist(), idq.tolist()):
+            diff = queries[r] - vecs[gid]
+            assert abs(float(diff @ diff) - dist) < 1e-2
+
+
 def test_quantize_roundtrip_error():
     rng = np.random.default_rng(0)
     x = rng.standard_normal((32, 128)).astype(np.float32)

@@ -192,6 +192,47 @@ else:
         pass
 
 
+def test_save_load_after_delete_rebuilds_tombstones(dataset, tmp_path):
+    """Checkpoint roundtrip after delete(): the restored index must rebuild
+    the PackedRuntime with tombstones re-applied to BOTH the device mask
+    and the per-state graphs (not merely reset ``vm.deleted``)."""
+    vecs, seqs = dataset
+    vm = VectorMaton(vecs[:150], seqs[:150],
+                     VectorMatonConfig(T=5, M=8, ef_con=50))
+    rng = np.random.default_rng(9)
+    q = rng.standard_normal(24).astype(np.float32)
+    d0, i0 = vm.query(q, "a", 10, ef_search=64)
+    victims = i0[:4].tolist()
+    for v in victims:
+        vm.delete(v)
+    path = os.path.join(tmp_path, "idx_del")
+    vm.save(path)
+    vm2 = VectorMaton.load(path)
+    assert vm2.deleted == set(victims)
+    # tombstones re-applied to every per-state graph containing a victim
+    for v in victims:
+        for u in vm2.runtime.graph_states_of(v):
+            assert v in vm2.state_index[u].graph._deleted, (v, u)
+    # ... and to the device mask of the rebuilt runtime
+    dev = vm2.runtime.to_device()
+    dmask = np.asarray(dev["deleted"])
+    assert all(dmask[v] for v in victims)
+    # queries on both backends exclude the victims and still fill k
+    d1, i1 = vm2.query(q, "a", 10, ef_search=64)
+    assert not set(victims) & set(i1.tolist())
+    ok = set(i for i, s in enumerate(seqs[:150]) if "a" in s) - set(victims)
+    assert len(i1) == min(10, len(ok))
+    vm2.config.backend = "jax"
+    vm2.runtime.backend = "jax"
+    d2, i2 = vm2.query(q, "a", 10, ef_search=64)
+    assert not set(victims) & set(i2.tolist())
+    # predicate queries recompile against the restored sequences
+    dl, il = vm2.query(q, "LIKE '%a%b%'", 5)
+    from repro.core.predicate import parse_predicate
+    pred = parse_predicate("LIKE '%a%b%'")
+    assert all(pred.matches(seqs[:150][i]) for i in il.tolist())
+
+
 def test_jax_backend_matches_numpy(dataset):
     vecs, seqs = dataset
     vm_np = VectorMaton(vecs[:80], seqs[:80],
