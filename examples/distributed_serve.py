@@ -1,6 +1,6 @@
 """Distributed pattern-constrained search: shard_map over a device mesh.
 
-Demonstrates the pod-scale serving path (DESIGN.md §4): the vector table
+Demonstrates the pod-scale serving path (DESIGN.md §5): the vector table
 row-sharded across the `data` axis, the planner coalescing same-pattern
 requests into shared plan entries, and each entry's chain cover (V_p)
 executed as one fused local top-k + all-gather merge.  Runs on 8

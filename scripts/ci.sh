@@ -38,4 +38,14 @@ PY
 # hold recall for every strategy it exercises
 python -m benchmarks.bench_selectivity --smoke
 
+# churn smoke (write path, DESIGN.md §4): records insert throughput and
+# QPS under a 10% write mix, and asserts that full runtime rebuilds
+# during churn equal the number of compactions — never the insert count —
+# and that the growable vector buffer stays amortized O(1) per insert
+python -m benchmarks.bench_churn --smoke
+
+# the churn oracle suite runs inside tier-1 above; re-run it explicitly so
+# a failure here names the write path directly
+python -m pytest -q tests/test_churn.py
+
 echo "ci.sh: all checks passed"

@@ -1,7 +1,7 @@
 """Assigned-architecture registry.
 
 Each module defines CONFIG (the exact published numbers from the assignment
-table — see DESIGN.md §5) and this package adds `get_config(name)` plus
+table — see DESIGN.md §6) and this package adds `get_config(name)` plus
 `smoke_config(name)`, a structurally-identical reduced variant for CPU
 smoke tests (same family/layer-pattern/flags, tiny dims).
 """

@@ -235,7 +235,7 @@ class ESAM:
         return self._topo
 
     # ------------------------------------------------------------------ #
-    # serialization (checkpointing; DESIGN.md §4 fault tolerance)
+    # serialization (checkpointing; DESIGN.md §5 fault tolerance)
     # ------------------------------------------------------------------ #
 
     def to_arrays(self) -> Dict[str, np.ndarray]:

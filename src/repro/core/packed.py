@@ -35,6 +35,20 @@ queries afterwards ship only the plan — candidate id lists and masks, the
 same order of magnitude as the per-batch distance work itself.  The host
 backend runs the same plan with NumPy kernels so results are
 backend-independent for brute-forced sources.
+
+Write path (DESIGN.md §4): a built ``PackedRuntime`` is an immutable
+**generation**.  Inserts never touch its arrays — they land in the
+attached ``DeltaRuntime`` (per-state delta ID lists plus a growable
+``VectorStore`` owned by the VectorMaton), and every execution strategy
+merges delta candidates: chain/scan segments get the delta IDs appended
+to their brute-forced sets (still one segmented kernel launch, with rows
+past the device-upload watermark shipped per batch), ``filtered_graph``
+and ``residual`` verify delta IDs host-side.  A compaction
+(``VectorMaton.compact``) folds delta + tombstone GC into a fresh
+generation and swaps it in with a single reference assignment; plans are
+stamped with the generation that compiled them and refuse to execute
+against another, so readers that snapshot a runtime keep a consistent
+view across the swap.
 """
 
 from __future__ import annotations
@@ -53,6 +67,94 @@ KIND_GRAPH = 1
 
 _EMPTY_F = np.empty(0, np.float32)
 _EMPTY_I = np.empty(0, np.int64)
+
+
+class VectorStore:
+    """Append-only (n, d) float32 table with capacity-doubling growth.
+
+    Replaces the O(N)-copy-per-insert ``np.concatenate`` write path: an
+    append is an O(d) row write, and the backing buffer reallocates only
+    O(log n) times, so total copy traffic is bounded by ~2× the final
+    table size (``bytes_copied`` tracks it; bench_churn asserts the
+    bound).  ``view`` is the live (n, d) prefix — a zero-copy slice that
+    must be re-fetched after an append, because a reallocation moves the
+    data to a new buffer.
+    """
+
+    def __init__(self, vectors: np.ndarray, min_capacity: int = 64) -> None:
+        v = np.ascontiguousarray(vectors, dtype=np.float32)
+        if v.ndim != 2:
+            raise ValueError("VectorStore expects an (n, d) table")
+        self.n = len(v)
+        cap = max(min_capacity, self.n)
+        self._buf = np.empty((cap, v.shape[1]), dtype=np.float32)
+        self._buf[:self.n] = v
+        self.reallocations = 0
+        self.bytes_copied = int(v.nbytes)
+
+    @property
+    def view(self) -> np.ndarray:
+        return self._buf[:self.n]
+
+    def append(self, row: np.ndarray) -> int:
+        row = np.asarray(row, dtype=np.float32)
+        if row.shape != (self._buf.shape[1],):
+            raise ValueError(
+                f"expected a ({self._buf.shape[1]},) vector, got shape "
+                f"{row.shape} (a scalar or mis-shaped row would silently "
+                "broadcast into a corrupt table row)")
+        if self.n == len(self._buf):
+            grown = np.empty((2 * len(self._buf), self._buf.shape[1]),
+                             dtype=np.float32)
+            grown[:self.n] = self._buf[:self.n]
+            self._buf = grown
+            self.reallocations += 1
+            self.bytes_copied += int(self.n * self._buf.shape[1] * 4)
+        self._buf[self.n] = row
+        self.n += 1
+        return self.n - 1
+
+
+class DeltaRuntime:
+    """Append-only insert log layered over one frozen generation.
+
+    Exactness argument (DESIGN.md §4): for a freeze-time state u the
+    frozen chain cover is exactly V_u at freeze time (Lemma 4), and V
+    sets only ever *append* post-freeze ids, so
+    ``V_u(now) = frozen cover ∪ chain-delta(u)`` where chain-delta is
+    the union of ``state_delta`` lists along u's frozen inheritance
+    chain (the affected-state logic in ``VectorMaton.insert`` lands each
+    new id at exactly one chain state, mirroring the cover's
+    disjointness).  States created after the freeze carry no frozen
+    cover and are answered from their live ESAM V set, which the
+    predicate compiler reads directly.  Tombstones are subtracted at
+    execute time, so every strategy is exact over
+    base ∪ delta − tombstones.
+    """
+
+    def __init__(self, n_base: int, n_states: int) -> None:
+        self.n_base = n_base        # vector-count watermark at freeze
+        self.n_states = n_states    # state-count watermark at freeze
+        self.version = 0            # bumped per insert (pred-cache key)
+        self.pending = 0            # inserts folded by the next compaction
+        self.state_delta: Dict[int, List[int]] = {}
+        # graphs born after the freeze — raw→graph promotions and HNSW
+        # indexes built for post-freeze clone states.  They are invisible
+        # to the frozen generation (not in graph_objs), so delete() must
+        # fan tombstones into them directly, and their existence triggers
+        # a compaction so the next generation actually searches them.
+        self.fresh_graph_states: set = set()
+
+    @property
+    def empty(self) -> bool:
+        return self.pending == 0
+
+    def record(self, state: int, vector_id: int) -> None:
+        """Log that ``state``'s base set gained ``vector_id``.  Called
+        from the insert path's affected-state logic; post-freeze states
+        are served from the live ESAM and are not recorded."""
+        if state < self.n_states:
+            self.state_delta.setdefault(state, []).append(vector_id)
 
 
 @dataclass
@@ -86,6 +188,8 @@ class QueryPlan:
     n_requests: int
     entries: List[PlanEntry]
     misses: List[int]                        # requests provably empty
+    generation: int = 0                      # runtime that compiled the plan
+    delta_version: int = 0                   # delta watermark at compile time
 
     @property
     def coalesced(self) -> int:
@@ -107,8 +211,8 @@ class PackedRuntime:
                  graph_objs: Dict[int, object], *, metric: str = "l2",
                  backend: str = "numpy", deleted: Optional[set] = None,
                  sequences: Optional[Sequence] = None,
-                 quantize: str = "none"):
-        self.vectors = vectors
+                 quantize: str = "none", generation: int = 0):
+        self.vectors = vectors          # live view; base rows are immutable
         self.kind = kind
         self.inherit = inherit
         self.base_ptr = base_ptr
@@ -120,17 +224,22 @@ class PackedRuntime:
         self.deleted = deleted if deleted is not None else set()
         self.sequences = list(sequences) if sequences is not None else []
         self.quantize = quantize
-        # state -> graph states whose base contains each id (delete fan-out)
+        self.generation = generation
+        self.n_states = len(kind)       # state-count watermark at freeze
+        self.delta = DeltaRuntime(len(vectors), len(kind))
+        # id -> graph states whose node set contains it (delete fan-out)
         self._id_graph_states: Optional[Dict[int, List[int]]] = None
         self._dev: Optional[dict] = None    # device cache, built once
-        self._pred_cache: Dict[str, CompiledPredicate] = {}
+        self._dev_n = 0                     # vector count at upload time
+        # predicate key -> (delta version at compile, compiled predicate)
+        self._pred_cache: Dict[str, Tuple[int, CompiledPredicate]] = {}
 
     # ------------------------------------------------------------------ #
     # construction
     # ------------------------------------------------------------------ #
 
     @classmethod
-    def build(cls, vm) -> "PackedRuntime":
+    def build(cls, vm, generation: int = 0) -> "PackedRuntime":
         """Flatten a VectorMaton's chain structure + per-state indexes."""
         from .vectormaton import _RAW  # local import avoids cycle
 
@@ -157,25 +266,33 @@ class PackedRuntime:
             base_ptr[u + 1] = base_ptr[u] + len(seg)
         base_ids = (np.concatenate(chunks) if chunks
                     else np.empty(0, np.int64))
-        return cls(vm.vectors, kind, np.asarray(vm.inherit, dtype=np.int64),
-                   base_ptr, base_ids, graphs, graph_objs,
-                   metric=vm.config.metric, backend=vm.config.backend,
-                   deleted=vm.deleted,
-                   sequences=getattr(vm, "sequences", None),
-                   quantize=getattr(vm.config, "quantize", "none"))
+        rt = cls(vm.vectors, kind, np.asarray(vm.inherit, dtype=np.int64),
+                 base_ptr, base_ids, graphs, graph_objs,
+                 metric=vm.config.metric, backend=vm.config.backend,
+                 deleted=vm.deleted,
+                 quantize=getattr(vm.config, "quantize", "none"),
+                 generation=generation)
+        # share (don't copy) the live sequence list: residual verification
+        # of delta ids must see sequences appended after this freeze
+        rt.sequences = getattr(vm, "sequences", rt.sequences)
+        return rt
 
     # ------------------------------------------------------------------ #
     # device residency
     # ------------------------------------------------------------------ #
 
     def to_device(self) -> dict:
-        """Upload the packed arrays once; reused by every later batch."""
+        """Upload the packed arrays once; reused by every later batch.
+        ``_dev_n`` records the row count at upload time — delta rows
+        appended later are shipped per batch by the executor's
+        watermark-split gather, never by re-uploading the table."""
         if self._dev is None:
             import jax
             import jax.numpy as jnp
-            dmask = np.zeros(len(self.vectors), dtype=bool)
+            self._dev_n = len(self.vectors)
+            dmask = np.zeros(self._dev_n, dtype=bool)
             if self.deleted:
-                gone = [i for i in self.deleted if i < len(self.vectors)]
+                gone = [i for i in self.deleted if i < self._dev_n]
                 dmask[gone] = True
             self._dev = {
                 "vectors": jax.device_put(jnp.asarray(self.vectors)),
@@ -192,18 +309,23 @@ class PackedRuntime:
 
     def mark_deleted(self, vector_id: int) -> None:
         """Keep the device-side tombstone mask in sync (no re-upload of the
-        index arrays — a single scatter into the resident mask)."""
-        if self._dev is not None and vector_id < len(self.vectors):
+        index arrays — a single scatter into the resident mask).  Delta
+        ids past the upload watermark are filtered host-side when their
+        candidate lists are built."""
+        if self._dev is not None and vector_id < self._dev_n:
             self._dev["deleted"] = (
                 self._dev["deleted"].at[vector_id].set(True))
 
     def graph_states_of(self, vector_id: int) -> List[int]:
-        """Graph states whose base segment contains ``vector_id``."""
+        """Graph states whose node set contains ``vector_id``.  Built from
+        the live host graph objects (not the frozen CSR) so ids added to
+        a graph after this generation froze still fan tombstones out;
+        the insert path invalidates the cache when it grows a graph."""
         if self._id_graph_states is None:
             m: Dict[int, List[int]] = {}
-            for u in self.graphs:
-                for g in self.base_ids[self.base_ptr[u]:self.base_ptr[u + 1]]:
-                    m.setdefault(int(g), []).append(u)
+            for u, g in self.graph_objs.items():
+                for gid in g.ids:
+                    m.setdefault(int(gid), []).append(u)
             self._id_graph_states = m
         return self._id_graph_states.get(int(vector_id), [])
 
@@ -226,7 +348,9 @@ class PackedRuntime:
                 e = PlanEntry(cp.key, [], cp.sources, cp.est)
                 entries[cp.key] = e
             e.requests.append(r)
-        return QueryPlan(len(compiled), list(entries.values()), misses)
+        return QueryPlan(len(compiled), list(entries.values()), misses,
+                         generation=self.generation,
+                         delta_version=self.delta.version)
 
     def chain_cover(self, state: int) -> ChainCover:
         """Walk the inheritance chain; CSR ranges covering exactly V_state."""
@@ -247,6 +371,24 @@ class PackedRuntime:
             u = int(self.inherit[u])
         return ChainCover(segments, raw_segments, graph_states, size)
 
+    def chain_delta_ids(self, state: int) -> np.ndarray:
+        """New ids in V_state since this generation froze, sorted.  Walks
+        the frozen inheritance chain: the insert path records each new id
+        at exactly one chain state (the deepest whose V gained it), so
+        the union along the chain is disjoint and, together with the
+        frozen cover, reproduces the live V_state exactly."""
+        sd = self.delta.state_delta
+        if not sd:
+            return _EMPTY_I
+        out: List[int] = []
+        u = state
+        while u != -1:
+            out.extend(sd.get(u, ()))
+            u = int(self.inherit[u])
+        if not out:
+            return _EMPTY_I
+        return np.sort(np.asarray(out, dtype=np.int64))
+
     def entry_mask(self, entry: PlanEntry) -> np.ndarray:
         """Exact (n,) bool membership of the entry's qualified set — OR over
         sources, residual verification applied.  Feeds the distributed
@@ -258,10 +400,17 @@ class PackedRuntime:
             if s.strategy in ("chain", "filtered_graph"):
                 for lo, hi in s.segments:
                     sm[self.base_ids[lo:hi]] = True
+                if s.delta_ids is not None:
+                    sm[s.delta_ids] = True
                 if s.allowed is not None:
-                    sm &= s.allowed
+                    a = s.allowed
+                    if len(a) < n:
+                        a = np.pad(a, (0, n - len(a)))
+                    sm &= a[:n]
             else:
                 sm[s.ids] = True
+                if s.delta_ids is not None:
+                    sm[s.delta_ids] = True
             if s.verify is not None:
                 for i in np.nonzero(sm)[0]:
                     if not s.verify.matches(self.sequences[int(i)]):
@@ -283,6 +432,20 @@ class PackedRuntime:
         (numpy) backend: same plan, NumPy kernels.  ``residual`` sources
         (multi-segment LIKE, negated LIKE) run an over-fetch + host-verify
         loop on either backend."""
+        if plan.generation != self.generation:
+            raise ValueError(
+                f"stale plan: compiled against generation "
+                f"{plan.generation}, executing on generation "
+                f"{self.generation} — snapshot the runtime once per batch "
+                "(VectorMaton.snapshot) so a compaction swap cannot split "
+                "plan and execute across generations")
+        if plan.delta_version != self.delta.version:
+            raise ValueError(
+                f"stale plan: compiled at delta version "
+                f"{plan.delta_version}, executing at "
+                f"{self.delta.version} — an insert landed between plan "
+                "and execute, so the plan's delta id lists are "
+                "incomplete; re-plan (query_batch does this per batch)")
         queries = np.ascontiguousarray(queries, dtype=np.float32)
         out: List[Tuple[np.ndarray, np.ndarray]] = [
             (_EMPTY_F, _EMPTY_I)] * plan.n_requests
@@ -332,25 +495,33 @@ class PackedRuntime:
         residual_items: List[Tuple[PlanEntry, CompiledSource]] = []
         for e in plan.entries:
             for s in e.sources:
+                delta = (s.delta_ids if s.delta_ids is not None
+                         and len(s.delta_ids) else None)
                 if s.strategy == "chain":
-                    if s.raw_segments:
-                        cand = np.concatenate(
-                            [self.base_ids[lo:hi]
-                             for lo, hi in s.raw_segments])
-                        scan_items.append((e, cand))
+                    parts = [self.base_ids[lo:hi]
+                             for lo, hi in s.raw_segments]
+                    if delta is not None:
+                        parts.append(delta)      # brute-forced with the raws
+                    if parts:
+                        scan_items.append((e, np.concatenate(parts)))
                     for u in s.graph_states:
                         graph_shared.setdefault(u, []).extend(e.requests)
                 elif s.strategy == "scan":
                     if len(s.ids):
                         scan_items.append((e, s.ids))
                 elif s.strategy == "filtered_graph":
+                    parts = []
                     if s.raw_segments:
                         cand = np.concatenate(
                             [self.base_ids[lo:hi]
                              for lo, hi in s.raw_segments])
                         cand = cand[s.allowed[cand]]
                         if len(cand):
-                            scan_items.append((e, cand))
+                            parts.append(cand)
+                    if delta is not None:     # host-verified at compile time
+                        parts.append(delta)
+                    if parts:
+                        scan_items.append((e, np.concatenate(parts)))
                     for u in s.graph_states:
                         graph_filtered.append((u, s.allowed, e.requests))
                 elif s.strategy == "residual":
@@ -366,6 +537,36 @@ class PackedRuntime:
             cand = cand[~np.isin(
                 cand, np.fromiter(self.deleted, dtype=np.int64))]
         return cand
+
+    def _live_tail(self, cand: np.ndarray, watermark: int) -> np.ndarray:
+        """Drop tombstoned candidates past the device-upload watermark —
+        the resident deleted-mask only covers rows that were uploaded."""
+        if not self.deleted:
+            return cand
+        tail = cand >= watermark
+        if not tail.any():
+            return cand
+        drop = tail & np.isin(cand, np.fromiter(self.deleted, np.int64))
+        return cand[~drop]
+
+    def _device_rows(self, cand_np: np.ndarray):
+        """(len(cand), d) rows on device: base rows gathered from the
+        resident table, rows past the upload watermark (delta inserts)
+        shipped from the host per call — the delta is bounded by the
+        compaction threshold, so this stays small against the distance
+        work itself."""
+        import jax.numpy as jnp
+        dev = self.to_device()
+        dn = self._dev_n
+        cand_dev = jnp.asarray(cand_np, jnp.int32)
+        tail = cand_np >= dn
+        if not tail.any():
+            return dev["vectors"][cand_dev]
+        if dn == 0:
+            return jnp.asarray(self.vectors[cand_np])
+        y = dev["vectors"][jnp.minimum(cand_dev, dn - 1)]
+        return y.at[jnp.asarray(np.nonzero(tail)[0], jnp.int32)].set(
+            jnp.asarray(self.vectors[cand_np[tail]]))
 
     def _execute_scan_host(self, queries, scan_items, k, parts) -> None:
         from ..kernels import ops
@@ -390,21 +591,31 @@ class PackedRuntime:
         if not scan_items:
             return
         dev = self.to_device()
+        dn = self._dev_n
         q_rows: List[int] = []
         q_owner: List[int] = []
         cand_chunks: List[np.ndarray] = []
         cseg_chunks: List[np.ndarray] = []
         for owner, (e, cand) in enumerate(scan_items):
+            cand = self._live_tail(cand, dn)
             cand_chunks.append(cand)
             cseg_chunks.append(np.full(len(cand), owner, dtype=np.int32))
             q_rows.extend(e.requests)
             q_owner.extend([owner] * len(e.requests))
         cand_np = np.concatenate(cand_chunks)
+        if len(cand_np) == 0:
+            return
         cand_dev = jnp.asarray(cand_np, jnp.int32)
-        y = dev["vectors"][cand_dev]
-        # tombstoned candidates: reassign to an unmatchable owner on device
+        y = self._device_rows(cand_np)
+        # tombstoned base candidates: reassign to an unmatchable owner on
+        # device (delta candidates were already filtered host-side above)
+        if dn == 0:
+            cdel = jnp.zeros(len(cand_np), dtype=bool)
+        else:
+            cdel = (dev["deleted"][jnp.minimum(cand_dev, dn - 1)]
+                    & (cand_dev < dn))
         cseg = jnp.asarray(np.concatenate(cseg_chunks))
-        cseg = jnp.where(dev["deleted"][cand_dev], -3, cseg)
+        cseg = jnp.where(cdel, -3, cseg)
         v, li = ops.topk_segmented(jnp.asarray(queries[q_rows]), y,
                                    jnp.asarray(np.asarray(q_owner,
                                                           np.int32)),
@@ -475,8 +686,13 @@ class PackedRuntime:
         for u, allowed, reqs in graph_filtered:
             h = dev["graphs"][u]
             # tombstones composed into the candidate bitmap: the filtered
-            # fold only admits allowed nodes, so k slots stay live
-            amask = jnp.asarray(allowed) & ~dev["deleted"]
+            # fold only admits allowed nodes, so k slots stay live.  The
+            # frozen graph only holds pre-watermark nodes, so the mask is
+            # cut to the resident table's length.
+            am = allowed
+            if len(am) < self._dev_n:
+                am = np.pad(am, (0, self._dev_n - len(am)))
+            amask = jnp.asarray(am[:self._dev_n]) & ~dev["deleted"]
             d, i = hnsw_search_batch(
                 dev["vectors"], h["ids"], h["level0"], h["entry"],
                 jnp.asarray(queries[reqs]), k=k, ef=max(ef_search, k),
@@ -499,9 +715,8 @@ class PackedRuntime:
         if self.backend == "jax":
             import jax
             import jax.numpy as jnp
-            dev = self.to_device()
             x = jnp.asarray(qmat)
-            y = dev["vectors"][jnp.asarray(cand, jnp.int32)]
+            y = self._device_rows(np.asarray(cand))
             if self.metric == "l2":
                 d = (jnp.sum(x * x, 1, keepdims=True) + jnp.sum(y * y, 1)
                      - 2.0 * x @ y.T)
@@ -588,4 +803,6 @@ class PackedRuntime:
             "graph_states": int((self.kind == KIND_GRAPH).sum()),
             "base_entries": int(self.base_ptr[-1]),
             "device_resident": int(self._dev is not None),
+            "generation": self.generation,
+            "delta_pending": self.delta.pending,
         }

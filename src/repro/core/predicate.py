@@ -386,6 +386,9 @@ class CompiledSource:
     allowed: Optional[np.ndarray] = None         # (n,) composed conjunct mask
     verify: Optional[Predicate] = None           # residual host check
     est: int = 0                                 # estimated |result|
+    delta_ids: Optional[np.ndarray] = None       # post-freeze inserts to
+                                                 # brute-force alongside the
+                                                 # frozen cover (write path)
 
 
 @dataclass
@@ -406,13 +409,18 @@ class CompiledPredicate:
 # ===================================================================== #
 
 class _Ctx:
-    """Per-compile scratch: cover/mask lookups against the packed CSR."""
+    """Per-compile scratch: cover/mask lookups against the packed CSR plus
+    the generation's delta (DESIGN.md §4).  Freeze-time states resolve to
+    frozen chain cover ∪ chain-delta; states created after the freeze
+    have no frozen cover and resolve to their live ESAM V set."""
 
     def __init__(self, esam, runtime) -> None:
         self.esam = esam
         self.rt = runtime
-        self.n = len(runtime.vectors)
+        self.n = len(runtime.vectors)            # live count: base + delta
+        self.n_frozen = runtime.n_states
         self._mask_cache: Dict[int, np.ndarray] = {}
+        self._delta_cache: Dict[int, np.ndarray] = {}
 
     def walk(self, pattern) -> int:
         return self.esam.walk(pattern)
@@ -420,11 +428,30 @@ class _Ctx:
     def cover(self, state: int):
         return self.rt.chain_cover(state)
 
+    def delta_ids(self, state: int) -> np.ndarray:
+        """Brute-force top-up for ``state``: post-freeze ids on its frozen
+        chain, or the whole live V set for post-freeze states."""
+        d = self._delta_cache.get(state)
+        if d is None:
+            if state < self.n_frozen:
+                d = self.rt.chain_delta_ids(state)
+            else:
+                d = np.asarray(self.esam.state_ids(state), dtype=np.int64)
+            self._delta_cache[state] = d
+        return d
+
+    def cover_size(self, state: int) -> int:
+        if state < self.n_frozen:
+            return self.cover(state).size + len(self.delta_ids(state))
+        return len(self.delta_ids(state))
+
     def cover_mask(self, state: int) -> np.ndarray:
         m = self._mask_cache.get(state)
         if m is None:
             m = np.zeros(self.n, dtype=bool)
-            m[self.rt.chain_ids(state)] = True
+            if state < self.n_frozen:
+                m[self.rt.chain_ids(state)] = True
+            m[self.delta_ids(state)] = True
             self._mask_cache[state] = m
         return m
 
@@ -479,11 +506,22 @@ def _contains_source(node: Contains, ctx: _Ctx) -> Optional[CompiledSource]:
     st = ctx.walk(node.pattern)
     if st == -1:
         return None
+    delta = ctx.delta_ids(st)
+    if st >= ctx.n_frozen:
+        # state born after the generation froze: no frozen cover — its
+        # live V set (which may include pre-freeze ids copied by a clone
+        # split) is brute-forced as an explicit scan
+        if len(delta) == 0:
+            return None
+        return CompiledSource(strategy="scan", anchor=st, ids=delta,
+                              est=len(delta))
     cov = ctx.cover(st)
     return CompiledSource(strategy="chain", anchor=st,
                           segments=cov.segments,
                           raw_segments=cov.raw_segments,
-                          graph_states=cov.graph_states, est=cov.size)
+                          graph_states=cov.graph_states,
+                          delta_ids=delta if len(delta) else None,
+                          est=cov.size + len(delta))
 
 
 def _mask_scan_source(mask: np.ndarray, exact: bool,
@@ -507,13 +545,14 @@ def _and_source(node: And, ctx: _Ctx) -> Optional[CompiledSource]:
             st = ctx.walk(c.pattern)
             if st == -1:
                 return None                       # conjunction provably empty
-            anchors.append((ctx.cover(st).size, i, st))
+            anchors.append((ctx.cover_size(st), i, st))
     if not anchors:
         mask, exact = _node_mask(node, ctx)
         return _mask_scan_source(mask, exact, node)
     anchors.sort()
     _, anchor_idx, anchor_state = anchors[0]
-    cov = ctx.cover(anchor_state)
+    frozen = anchor_state < ctx.n_frozen
+    cov = ctx.cover(anchor_state) if frozen else None
     allowed = np.ones(ctx.n, dtype=bool)
     exact = True
     for i, c in enumerate(node.children):
@@ -522,27 +561,36 @@ def _and_source(node: And, ctx: _Ctx) -> Optional[CompiledSource]:
         cm, ce = _node_mask(c, ctx)
         allowed &= cm
         exact &= ce
-    anchor_ids = ctx.rt.chain_ids(anchor_state)
-    keep = allowed[anchor_ids]
-    sel = int(keep.sum())
+    anchor_base = (ctx.rt.chain_ids(anchor_state) if frozen
+                   else np.empty(0, np.int64))
+    anchor_delta = ctx.delta_ids(anchor_state)
+    keep_base = allowed[anchor_base]
+    # delta ids verified against the composed mask host-side here — they
+    # are brute-forced regardless of the strategy chosen below
+    delta_kept = np.sort(anchor_delta[allowed[anchor_delta]])
+    sel = int(keep_base.sum()) + len(delta_kept)
     if sel == 0 and exact:
         return None
     if not exact:
-        ids = np.sort(anchor_ids[keep])
+        ids = np.sort(np.concatenate([anchor_base[keep_base], delta_kept]))
         if len(ids) == 0:
             return None
         return CompiledSource(strategy="residual", anchor=anchor_state,
                               ids=ids, verify=node, est=sel)
-    if cov.graph_states and sel >= max(
+    if frozen and cov.graph_states and sel >= max(
             FILTERED_GRAPH_MIN_KEEP,
-            int(FILTERED_GRAPH_MIN_FRAC * cov.size)):
+            int(FILTERED_GRAPH_MIN_FRAC * ctx.cover_size(anchor_state))):
         return CompiledSource(strategy="filtered_graph", anchor=anchor_state,
                               segments=cov.segments,
                               raw_segments=cov.raw_segments,
                               graph_states=cov.graph_states,
-                              allowed=allowed, est=sel)
-    return CompiledSource(strategy="scan", anchor=anchor_state,
-                          ids=np.sort(anchor_ids[keep]), est=sel)
+                              allowed=allowed, est=sel,
+                              delta_ids=(delta_kept if len(delta_kept)
+                                         else None))
+    return CompiledSource(
+        strategy="scan", anchor=anchor_state,
+        ids=np.sort(np.concatenate([anchor_base[keep_base], delta_kept])),
+        est=sel)
 
 
 def _like_source(node: Like, ctx: _Ctx) -> Optional[CompiledSource]:
@@ -557,7 +605,7 @@ def _like_source(node: Like, ctx: _Ctx) -> Optional[CompiledSource]:
         st = ctx.walk(lit)
         if st == -1:
             return None
-        size = ctx.cover(st).size
+        size = ctx.cover_size(st)
         if best_state == -1 or size < best_size:
             best_state, best_size = st, size
         lm = ctx.cover_mask(st)
@@ -635,6 +683,8 @@ def _fuse_scan_disjuncts(sources: List[CompiledSource], ctx: _Ctx
         else:
             for lo, hi in s.segments:
                 m[ctx.rt.base_ids[lo:hi]] = True
+        if s.delta_ids is not None:
+            m[s.delta_ids] = True
     ids = np.nonzero(m)[0].astype(np.int64)
     if len(ids) == 0:
         return rest

@@ -24,9 +24,14 @@ bitmap-filtered) beam searches, and residual LIKEs with an over-fetch +
 host-verify loop.  ``query`` is the single-request special case of
 ``query_batch``.
 
-Maintenance (paper §5): online insert extends the automaton and patches the
-affected base indexes without a global rebuild; deletes are lazy marks
-filtered at query time.
+Maintenance (paper §5, extended by DESIGN.md §4 "Write path"): online
+insert extends the automaton and patches the affected base indexes without
+a global rebuild — and without invalidating the packed query runtime: the
+flattened ``PackedRuntime`` is an immutable *generation*, inserts land in
+its append-only delta (growable vector buffer + per-state delta ID lists),
+and a threshold-triggered *compaction* folds delta + tombstone GC into a
+fresh generation swapped in behind the readers.  Deletes are lazy marks
+filtered at query time and physically GC'd at compaction.
 
 Parallel build mirrors the paper's concurrent ready-queue over reverse
 topological order (thread pool; NumPy releases the GIL inside distance
@@ -44,7 +49,7 @@ import numpy as np
 
 from .esam import ESAM, ROOT
 from .hnsw import HNSW
-from .packed import PackedRuntime, QueryPlan
+from .packed import PackedRuntime, QueryPlan, VectorStore
 from .predicate import CompiledPredicate, Predicate, as_predicate, \
     compile_predicate
 
@@ -63,6 +68,12 @@ class VectorMatonConfig:
     seed: int = 0
     backend: str = "numpy"       # 'numpy' host path | 'jax' device path
     quantize: str = "none"       # 'sq8': int8 scan + fp32 rerank raw path
+    # write path (DESIGN.md §4): fold the delta into a fresh generation
+    # once it holds max(compact_min_inserts, compact_ratio · |base|)
+    # inserts; auto_compact=False leaves compaction to explicit compact()
+    compact_min_inserts: int = 256
+    compact_ratio: float = 0.25
+    auto_compact: bool = True
 
 
 @dataclass
@@ -89,18 +100,36 @@ class VectorMaton:
                  config: Optional[VectorMatonConfig] = None,
                  workers: int = 1) -> None:
         self.config = config or VectorMatonConfig()
-        self.vectors = np.ascontiguousarray(vectors, dtype=np.float32)
+        self.vectors = vectors                   # adopted into a VectorStore
         self.esam = ESAM()
         self.inherit: List[int] = []
         self.state_index: List[Optional[_StateIndex]] = []
         self.deleted: set = set()
         self.sequences: List = list(sequences)   # LIKE residual verification
         self._lock = threading.Lock()
+        self._compact_lock = threading.Lock()
+        self.runtime_builds = 0                  # full re-flatten count
+        self.n_compactions = 0
+        self._gen_seq = 0                        # next generation number
         for s in sequences:
             self.esam.add_sequence(s)
         self.esam.finalize()
         self._build_state_indexes(workers=workers)
-        self._runtime: Optional[PackedRuntime] = PackedRuntime.build(self)
+        self._runtime: Optional[PackedRuntime] = self._build_runtime()
+
+    # ------------------------------------------------------------------ #
+    # vector storage (growable, capacity-doubling — DESIGN.md §4)
+    # ------------------------------------------------------------------ #
+
+    @property
+    def vectors(self) -> np.ndarray:
+        """Live (n, d) view of the growable vector table.  Re-fetched by
+        readers after every insert (a buffer reallocation moves it)."""
+        return self._vec_store.view
+
+    @vectors.setter
+    def vectors(self, table: np.ndarray) -> None:
+        self._vec_store = VectorStore(table)
 
     # ------------------------------------------------------------------ #
     # index construction (Algorithm 3 lines 17-21)
@@ -204,45 +233,68 @@ class VectorMaton:
             u = self.inherit[u]
         return out
 
+    def _build_runtime(self) -> PackedRuntime:
+        """One full re-flatten = one generation.  Counted: the churn
+        acceptance criterion is builds == compactions, not inserts."""
+        rt = PackedRuntime.build(self, generation=self._gen_seq)
+        self._gen_seq += 1
+        self.runtime_builds += 1
+        return rt
+
     @property
     def runtime(self) -> PackedRuntime:
-        """The packed query runtime, re-flattened lazily after structural
-        changes so a burst of inserts pays for one rebuild, not N."""
+        """The current generation.  Inserts do NOT invalidate it — they
+        land in its delta; only a compaction (or a checkpoint restore)
+        produces a new one."""
         if self._runtime is None:
-            self._runtime = PackedRuntime.build(self)
+            self._runtime = self._build_runtime()
         return self._runtime
 
+    def snapshot(self) -> PackedRuntime:
+        """The current immutable generation (plus its delta).  Readers
+        take one snapshot per batch: a plan compiled against it executes
+        against it, so a concurrent compaction swap can never split plan
+        and execute across generations (execute() enforces this)."""
+        return self.runtime
+
     def _refresh_runtime(self) -> None:
-        """Invalidate after a structural change (insert / promotion)."""
+        """Invalidate wholesale (checkpoint restore); the ordinary write
+        path goes through the delta + compact() instead."""
         self._runtime = None
 
     _PRED_CACHE_MAX = 256        # entries can hold O(n) id arrays/masks
 
-    def compile(self, pattern) -> CompiledPredicate:
+    def compile(self, pattern,
+                runtime: Optional[PackedRuntime] = None) -> CompiledPredicate:
         """Lower a request pattern — a plain CONTAINS pattern, a predicate
         string (``"ab AND NOT LIKE 'c%d'"``), or a ``Predicate`` — to
-        executable sources.  Compiled predicates are cached per runtime
-        flattening (inserts rebuild the runtime and so invalidate them;
-        deletes are tombstone-filtered at execute time and don't).  The
-        cache is bounded: compiled boolean sources carry O(n) id arrays,
-        so a serving stream of ever-distinct predicates must not grow it
+        executable sources against ``runtime`` (default: current
+        snapshot).  Compiled predicates are cached per (runtime, delta
+        version): an insert bumps the delta version so stale plans (whose
+        delta id lists miss the newest writes) recompile; deletes are
+        tombstone-filtered at execute time and don't.  The cache is
+        bounded: compiled boolean sources carry O(n) id arrays, so a
+        serving stream of ever-distinct predicates must not grow it
         without bound (FIFO eviction; coalescing only needs the batch's
         working set)."""
         pred = as_predicate(pattern)
-        rt = self.runtime
+        rt = runtime if runtime is not None else self.runtime
         key = pred.key()
-        cp = rt._pred_cache.get(key)
-        if cp is None:
-            cp = compile_predicate(pred, self.esam, rt)
-            while len(rt._pred_cache) >= self._PRED_CACHE_MAX:
-                rt._pred_cache.pop(next(iter(rt._pred_cache)))
-            rt._pred_cache[key] = cp
+        hit = rt._pred_cache.get(key)
+        if hit is not None and hit[0] == rt.delta.version:
+            return hit[1]
+        cp = compile_predicate(pred, self.esam, rt)
+        while len(rt._pred_cache) >= self._PRED_CACHE_MAX:
+            rt._pred_cache.pop(next(iter(rt._pred_cache)))
+        rt._pred_cache[key] = (rt.delta.version, cp)
         return cp
 
-    def plan(self, patterns: Sequence) -> QueryPlan:
+    def plan(self, patterns: Sequence,
+             runtime: Optional[PackedRuntime] = None) -> QueryPlan:
         """Compile each request's predicate and coalesce identical
         predicates into one plan entry each (the host planner half)."""
-        return self.runtime.plan([self.compile(p) for p in patterns])
+        rt = runtime if runtime is not None else self.runtime
+        return rt.plan([self.compile(p, rt) for p in patterns])
 
     def query(self, v_q: np.ndarray, pattern, k: int,
               ef_search: int = 64) -> Tuple[np.ndarray, np.ndarray]:
@@ -262,9 +314,12 @@ class VectorMaton:
         then one segmented device sweep for all brute-forced candidate
         sets + one vmapped beam search per shared graph (+ residual
         verification loops for multi-segment LIKE).  Returns
-        [(dists, ids)] per request."""
-        return self.runtime.execute(queries, self.plan(patterns), k,
-                                    ef_search=ef_search)
+        [(dists, ids)] per request.  Plans and executes against ONE
+        runtime snapshot, so a mid-batch compaction swap cannot mix
+        generations."""
+        rt = self.snapshot()
+        return rt.execute(queries, self.plan(patterns, rt), k,
+                          ef_search=ef_search)
 
     # ------------------------------------------------------------------ #
     # maintenance (paper §5)
@@ -274,19 +329,35 @@ class VectorMaton:
         """Online insert: extend automaton; patch base indexes of affected
         states.  New states index only the new ID (their V starts at {i});
         clones rebuild their base against the current best successor —
-        correctness over size-optimality, as in the paper's online update."""
+        correctness over size-optimality, as in the paper's online update.
+
+        Write path (DESIGN.md §4): the vector lands in the growable table
+        (amortized O(d) append — no O(N) concatenate) and the id is logged
+        into the current generation's delta at exactly the states the
+        affected-state logic patches, so the frozen ``PackedRuntime`` —
+        including its device-resident arrays — survives untouched.
+        Queries merge base ∪ delta; the re-flatten cost moves to the next
+        compaction, triggered here once the delta crosses the configured
+        threshold (or immediately on a raw→graph promotion, which the
+        frozen generation cannot see)."""
         i = self.esam.num_sequences
         self.sequences.append(sequence)
-        self.vectors = np.concatenate(
-            [self.vectors, np.asarray(vector, np.float32)[None, :]], axis=0)
+        self._vec_store.append(vector)
+        view = self.vectors
         for si in self.state_index:
             if si is not None and si.kind == _HNSW:
-                si.graph.vectors = self.vectors
+                si.graph.vectors = view          # re-point at the live view
+        rt = self._runtime
+        delta = rt.delta if rt is not None else None
+        if rt is not None:
+            rt.vectors = view
         old_n = self.esam.num_states
         self.esam.add_sequence(sequence)
         self.esam.finalize()
         n = self.esam.num_states
-        # new states (created by this sequence): fresh indexes
+        # new states (created by this sequence): fresh indexes.  They are
+        # past the generation's state watermark, so the compiler answers
+        # them from their live ESAM V sets — no delta record needed.
         self.inherit.extend([-1] * (n - old_n))
         self.state_index.extend([None] * (n - old_n))
         for u in range(old_n, n):
@@ -295,6 +366,11 @@ class VectorMaton:
                 # clone: recompute inheritance against current successors
                 self.inherit[u] = self._pick_inherit(u)
                 self.state_index[u] = self._build_one(u)
+                if (delta is not None
+                        and self.state_index[u].kind == _HNSW):
+                    # a graph born after the freeze: delete() must reach
+                    # it, and compaction should fold it into service
+                    delta.fresh_graph_states.add(u)
             else:
                 self.state_index[u] = _StateIndex(
                     _RAW, raw_ids=np.asarray([i], dtype=np.int64))
@@ -317,10 +393,106 @@ class VectorMaton:
                 if (not self.config.skip_build
                         or len(idx.raw_ids) >= 4 * self.config.T):
                     self.state_index[u] = self._promote(idx.raw_ids, u)
+                    if delta is not None:
+                        delta.fresh_graph_states.add(u)
             else:
                 idx.graph.add(i)
-        self._refresh_runtime()
+                if delta is not None:
+                    # keep the delete fan-out map fresh incrementally; a
+                    # post-freeze graph (promotion/clone) is absent from
+                    # graph_objs and handled via fresh_graph_states
+                    m = rt._id_graph_states
+                    if m is not None and u in rt.graph_objs:
+                        m.setdefault(i, []).append(u)
+            if delta is not None:
+                delta.record(u, i)
+        if delta is not None:
+            delta.pending += 1
+            delta.version += 1                   # invalidates cached plans
+        if self.config.auto_compact:
+            self.maybe_compact()
         return i
+
+    def maybe_compact(self) -> bool:
+        """Threshold / size-ratio compaction trigger: fold the delta once
+        it holds max(compact_min_inserts, compact_ratio · |frozen base|)
+        inserts, or immediately after a raw→graph promotion (the promoted
+        graph is invisible to the frozen generation until folded)."""
+        rt = self._runtime
+        if rt is None:
+            return False
+        d = rt.delta
+        if d.empty and not d.fresh_graph_states:
+            return False
+        threshold = max(self.config.compact_min_inserts,
+                        int(self.config.compact_ratio * d.n_base))
+        if d.fresh_graph_states or d.pending >= threshold:
+            self.compact()
+            return True
+        return False
+
+    def compact(self) -> PackedRuntime:
+        """Fold the delta and GC tombstones into a fresh generation.
+
+        Built off the read path: the current generation keeps serving
+        while the new one flattens — readers holding a snapshot stay on a
+        consistent (generation, delta) view — and the swap is one
+        reference assignment.  Tombstone GC drops deleted ids from every
+        raw base set and rebuilds (or demotes) graphs whose tombstone
+        fraction crossed ``_GRAPH_GC_FRAC``; the ids stay in ``deleted``
+        because the ESAM's V sets cannot shrink."""
+        with self._compact_lock:
+            if self.deleted:
+                self._gc_tombstones()
+            new_rt = self._build_runtime()
+            self._runtime = new_rt
+            self.n_compactions += 1
+            return new_rt
+
+    _GRAPH_GC_FRAC = 0.5
+
+    def _gc_tombstones(self) -> None:
+        gone = np.fromiter(self.deleted, dtype=np.int64)
+        for u, idx in enumerate(self.state_index):
+            if idx is None:
+                continue
+            if idx.kind == _RAW:
+                if len(idx.raw_ids):
+                    keep = ~np.isin(idx.raw_ids, gone)
+                    if not keep.all():
+                        idx.raw_ids = idx.raw_ids[keep]
+            else:
+                g = idx.graph
+                dead = g._deleted & set(int(x) for x in g.ids)
+                if len(dead) <= self._GRAPH_GC_FRAC * max(1, len(g.ids)):
+                    continue
+                live = np.asarray([x for x in g.ids if x not in dead],
+                                  dtype=np.int64)
+                if len(live) < max(1, self.config.T):
+                    self.state_index[u] = _StateIndex(_RAW, raw_ids=live)
+                else:
+                    ng = HNSW(self.vectors, M=self.config.M,
+                              ef_con=self.config.ef_con,
+                              metric=self.config.metric,
+                              seed=self.config.seed + u)
+                    ng.build(live)
+                    self.state_index[u] = _StateIndex(_HNSW, graph=ng)
+
+    def maintenance_stats(self) -> Dict[str, int]:
+        """Write-path accounting: generation / delta / compaction counters
+        plus the growable-buffer copy trace (bench_churn's acceptance
+        signals: builds == compactions, O(log n) reallocations)."""
+        rt = self._runtime
+        return {
+            "generation": rt.generation if rt is not None else -1,
+            "delta_pending": rt.delta.pending if rt is not None else 0,
+            "delta_version": rt.delta.version if rt is not None else 0,
+            "runtime_builds": self.runtime_builds,
+            "compactions": self.n_compactions,
+            "vector_reallocations": self._vec_store.reallocations,
+            "vector_bytes_copied": self._vec_store.bytes_copied,
+            "deleted": len(self.deleted),
+        }
 
     def _promote(self, raw_ids: np.ndarray, u: int) -> _StateIndex:
         """Raw -> HNSW promotion once a raw set outgrows 4*T (paper §5): the
@@ -335,15 +507,23 @@ class VectorMaton:
 
     def delete(self, vector_id: int) -> None:
         """Lazy deletion (paper §5): mark and filter at query time.  The
-        tombstone is propagated into every per-state graph whose base set
-        contains the ID, so graph searches skip it in-scan instead of
+        tombstone is propagated into every per-state graph whose node set
+        contains the ID (so graph searches skip it in-scan instead of
         returning it and crowding out live candidates before the
-        query-level filter."""
+        query-level filter), into graphs promoted since the generation
+        froze, and into the device-resident mask.  Physical removal
+        happens at the next compaction's tombstone GC."""
         vid = int(vector_id)
         self.deleted.add(vid)
-        for u in self.runtime.graph_states_of(vid):
-            self.state_index[u].graph.mark_deleted(vid)
-        self.runtime.mark_deleted(vid)
+        rt = self.runtime
+        for u in rt.graph_states_of(vid):
+            rt.graph_objs[u].mark_deleted(vid)
+        for u in rt.delta.fresh_graph_states:
+            idx = self.state_index[u]
+            if (idx is not None and idx.kind == _HNSW
+                    and vid in idx.graph.ids):
+                idx.graph.mark_deleted(vid)
+        rt.mark_deleted(vid)
 
     # ------------------------------------------------------------------ #
     # accounting / serialization

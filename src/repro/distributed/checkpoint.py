@@ -1,10 +1,17 @@
-"""Checkpointing — fault-tolerance substrate (DESIGN.md §4).
+"""Checkpointing — fault-tolerance substrate (DESIGN.md §5).
 
 Two checkpoint families share one on-disk format:
 
   * **Index checkpoints** (`save_vectormaton`): ESAM struct-of-arrays +
     per-state index descriptors + the vector table.  Restores without any
-    rebuild — the restart path after a node failure during serving.
+    index rebuild — the restart path after a node failure during serving.
+    A checkpoint taken mid-churn is complete by construction: the write
+    path patches the build-side state indexes and vector table as inserts
+    land (only the packed runtime is deferred), so the saved arrays embed
+    the delta and pending tombstones round-trip via ``deleted``.  Restore
+    therefore lands on a fresh generation — a free compaction point —
+    with delta/compaction counters carried across via ``delta_meta`` so
+    generation numbering keeps advancing monotonically.
   * **Train-state checkpoints** (`CheckpointManager`): pytree of arrays
     saved as per-host shard files + a JSON manifest; atomic rename commit;
     optional async (background-thread) save so the train loop never blocks
@@ -79,7 +86,25 @@ def save_vectormaton(vm, path: str) -> None:
                            int(vm.config.reuse), int(vm.config.skip_build),
                            vm.config.seed,
                            0 if getattr(vm.config, "quantize", "none")
-                           == "none" else 1], dtype=np.int64))
+                           == "none" else 1,
+                           getattr(vm.config, "compact_min_inserts", 256),
+                           int(getattr(vm.config, "compact_ratio", 0.25)
+                               * 10_000),
+                           int(getattr(vm.config, "auto_compact", True))],
+                          dtype=np.int64),
+        # write-path counters: [generation, delta pending at save,
+        # delta version, compactions, runtime builds].  The saved index
+        # arrays already embed the delta's inserts (state indexes are
+        # patched online), so restore folds them into a fresh generation:
+        # generation / compactions / runtime builds round-trip; pending
+        # and version are save-time observability only (what was in
+        # flight when the checkpoint was cut), never restored
+        delta_meta=np.asarray(
+            [vm._runtime.generation if vm._runtime is not None else -1,
+             vm._runtime.delta.pending if vm._runtime is not None else 0,
+             vm._runtime.delta.version if vm._runtime is not None else 0,
+             getattr(vm, "n_compactions", 0),
+             getattr(vm, "runtime_builds", 0)], dtype=np.int64))
     if os.path.exists(path):
         shutil.rmtree(path)
     os.replace(tmp, path)
@@ -100,6 +125,10 @@ def load_vectormaton(cls, path: str):
         skip_build=bool(cfg_arr[5]), seed=int(cfg_arr[6]),
         quantize=("sq8" if len(cfg_arr) > 7 and cfg_arr[7] == 1
                   else "none"))
+    if len(cfg_arr) > 10:      # write-path knobs (older checkpoints lack)
+        config.compact_min_inserts = int(cfg_arr[8])
+        config.compact_ratio = float(cfg_arr[9]) / 10_000
+        config.auto_compact = bool(cfg_arr[10])
     vm = cls.__new__(cls)
     vm.config = config
     vm.vectors = np.load(os.path.join(path, "vectors.npy"))
@@ -111,6 +140,14 @@ def load_vectormaton(cls, path: str):
     vm.inherit = states["inherit"].tolist()
     vm.deleted = set(int(x) for x in states["deleted"])
     vm._lock = threading.Lock()
+    vm._compact_lock = threading.Lock()
+    # write-path counters: resume generation numbering past the saved one
+    # (the restored runtime is a fresh generation — the saved delta's
+    # inserts are already embedded in the state indexes / vector table)
+    meta = states["delta_meta"] if "delta_meta" in states else None
+    vm._gen_seq = int(meta[0]) + 1 if meta is not None else 0
+    vm.n_compactions = int(meta[3]) if meta is not None else 0
+    vm.runtime_builds = int(meta[4]) if meta is not None else 0
     kinds = states["kinds"]
     raw_ptr = states["raw_ptr"]
     raw_data = states["raw_data"]

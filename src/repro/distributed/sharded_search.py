@@ -1,6 +1,6 @@
 """Distributed vector search — shard_map over the `data` mesh axis.
 
-The VectorMaton serving story at pod scale (DESIGN.md §4): the global
+The VectorMaton serving story at pod scale (DESIGN.md §5): the global
 vector table is row-sharded across the `data` axis; every device computes
 the fused distance+top-k over its local shard (the same Pallas kernel the
 single-chip path uses), then the k winners per shard are all-gathered and
@@ -102,28 +102,70 @@ def sharded_plan_topk(mesh: Mesh, base: jax.Array, runtime, queries,
     ALL of the entry's requests run through one sharded fused sweep.
     Returns [(dists, ids)] aligned with the request batch; tombstoned IDs
     never win.
+
+    Delta overflow (DESIGN.md §4): the sharded ``base`` table is frozen
+    at upload, so qualified ids past its length — inserts still sitting
+    in the runtime's delta, pending compaction and re-shard — are
+    brute-forced host-side against the runtime's live vector view and
+    merged into each request's top-k.  The delta is bounded by the
+    compaction threshold, so this stays negligible against the sharded
+    distance work, and answers remain exact mid-churn.
     """
     import numpy as np
+    # same snapshot discipline as PackedRuntime.execute: a plan's CSR
+    # offsets and delta id lists are only meaningful against the runtime
+    # state that compiled them
+    if plan.generation != runtime.generation:
+        raise ValueError(
+            f"stale plan: compiled against generation {plan.generation}, "
+            f"sharded-executing on generation {runtime.generation} — "
+            "snapshot the runtime once per batch")
+    if plan.delta_version != runtime.delta.version:
+        raise ValueError(
+            f"stale plan: compiled at delta version {plan.delta_version}, "
+            f"sharded-executing at {runtime.delta.version} — an insert "
+            "landed between plan and execute; re-plan")
     n = base.shape[0]
-    queries = jnp.asarray(queries, f32)
+    queries_np = np.ascontiguousarray(np.asarray(queries), dtype=np.float32)
+    queries = jnp.asarray(queries_np, f32)
     out = [(np.empty(0, np.float32), np.empty(0, np.int64))
            ] * plan.n_requests
     deleted = runtime.deleted
     for entry in plan.entries:
-        mask = runtime.entry_mask(entry)[:n]
+        full_mask = runtime.entry_mask(entry)
+        extra_ids = (np.nonzero(full_mask[n:])[0].astype(np.int64) + n
+                     if len(full_mask) > n else np.empty(0, np.int64))
+        mask = full_mask[:n]
         if len(mask) < n:
             mask = np.pad(mask, (0, n - len(mask)))
         if deleted:
             mask[[i for i in deleted if i < n]] = False
+            if len(extra_ids):
+                extra_ids = extra_ids[~np.isin(
+                    extra_ids, np.fromiter(deleted, dtype=np.int64))]
         with mesh:
             d, i = sharded_topk(mesh, queries[entry.requests, :], base, k,
                                 metric=metric, axis=axis,
                                 valid_mask=jnp.asarray(mask))
         d = np.asarray(d)
         i = np.asarray(i, dtype=np.int64)
+        ed = None
+        if len(extra_ids):
+            ev = np.asarray(runtime.vectors[extra_ids], dtype=np.float32)
+            qm = queries_np[entry.requests]
+            if metric == "l2":
+                ed = ((qm[:, None, :] - ev[None, :, :]) ** 2).sum(-1)
+            else:
+                ed = -(qm @ ev.T)
         for row, r in enumerate(entry.requests):
             valid = np.isfinite(d[row]) & (i[row] >= 0)
-            out[r] = (d[row][valid], i[row][valid])
+            dr, ir = d[row][valid], i[row][valid]
+            if ed is not None:
+                dr = np.concatenate([dr, ed[row].astype(np.float32)])
+                ir = np.concatenate([ir, extra_ids])
+                order = np.argsort(dr, kind="stable")[:k]
+                dr, ir = dr[order], ir[order]
+            out[r] = (dr, ir)
     return out
 
 

@@ -1,6 +1,6 @@
 """Sharding rules — DP/FSDP/TP/EP/SP for every arch and shape.
 
-Strategy (DESIGN.md §4):
+Strategy (DESIGN.md §5):
   * TP over `model`: attention heads (uniform head axis — KV expanded per
     models/layers.py), FFN hidden, experts (EP), SSD heads, vocab;
   * FSDP over `data`: the non-TP dimension of every ≥2-D weight;

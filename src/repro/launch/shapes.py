@@ -6,7 +6,7 @@ Four shapes per architecture (40 cells):
     decode_32k   seq 32,768  batch 128   -> serve_step (1 token, 32k cache)
     long_500k    seq 524,288 batch 1     -> serve_step (1 token, 500k cache)
 
-Skips (DESIGN.md §5): long_500k only for sub-quadratic families — ssm,
+Skips (DESIGN.md §6): long_500k only for sub-quadratic families — ssm,
 hybrid, and bounded-window SWA (gemma3-1b, h2o-danube); pure full-attention
 archs skip it.  Everything else lowers for all archs.
 

@@ -2,7 +2,7 @@
 
 One dataclass, one source of truth: the per-arch files in repro/configs/
 instantiate this with the exact published numbers (see the assignment table
-in DESIGN.md §5).  Model code branches only on the *structural* fields
+in DESIGN.md §6).  Model code branches only on the *structural* fields
 (family, layer pattern), never on the arch name.
 """
 

@@ -1,6 +1,6 @@
 """Mixture-of-Experts FFN — top-k routing with capacity-bounded dispatch.
 
-TPU-native formulation (DESIGN.md §4): tokens stay resident on their data
+TPU-native formulation (DESIGN.md §5): tokens stay resident on their data
 shard; experts are sharded over the `model` mesh axis (EP) and their weights
 FSDP-sharded over `data`.  Dispatch/combine are one-hot einsums whose only
 collective under GSPMD is the TP-sized all-reduce on the combine contraction

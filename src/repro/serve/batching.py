@@ -18,8 +18,9 @@ from __future__ import annotations
 
 import heapq
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Deque, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -43,6 +44,14 @@ class ContinuousBatcher:
     ``max_wave``: max requests per wave.
     Fairness: FIFO within cost class; a request can be deferred at most
     ``max_defer`` waves before it is force-admitted (no starvation).
+
+    Writes interleave with reads (DESIGN.md §4): ``submit_insert``
+    enqueues a record, and each wave applies pending writes at its head —
+    every write is an O(d) delta append, never a runtime rebuild, so
+    query admission latency stays flat under a write mix.  If a write
+    trips the index's compaction threshold the generation swap happens
+    between waves; the wave's ``query_batch`` snapshots one generation,
+    so in-flight plans keep answering on the one they compiled against.
     """
 
     def __init__(self, engine: RetrievalEngine, budget: int = 200_000,
@@ -54,6 +63,15 @@ class ContinuousBatcher:
         self._queue: List[_Queued] = []
         self._seq = 0
         self._deferred: Dict[int, int] = {}
+        self._writes: Deque[Tuple[int, np.ndarray, Sequence]] = deque()
+        self._write_seq = 0
+        # write ticket -> assigned vector id.  Bounded FIFO: a long-lived
+        # serving process applies unbounded writes, so callers must read
+        # their ticket within _WRITE_RESULTS_MAX subsequent writes.
+        self.write_results: Dict[int, int] = {}
+        self.writes_applied = 0
+
+    _WRITE_RESULTS_MAX = 4096
 
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> int:
@@ -71,6 +89,32 @@ class ContinuousBatcher:
 
     def pending(self) -> int:
         return len(self._queue)
+
+    # ------------------------------------------------------------------ #
+    def submit_insert(self, vector: np.ndarray, sequence: Sequence) -> int:
+        """Enqueue a write; applied at the head of the next wave.  Returns
+        a write ticket — once the wave that applies it has run, the
+        assigned vector id is available in ``write_results[ticket]``."""
+        t = self._write_seq
+        self._write_seq += 1
+        self._writes.append((t, vector, sequence))
+        return t
+
+    def writes_pending(self) -> int:
+        return len(self._writes)
+
+    def _apply_writes(self) -> List[int]:
+        """Drain pending writes into the delta runtime (pre-wave)."""
+        ids: List[int] = []
+        while self._writes:
+            t, v, s = self._writes.popleft()
+            vid = self.engine.insert(v, s)
+            self.write_results[t] = vid
+            while len(self.write_results) > self._WRITE_RESULTS_MAX:
+                self.write_results.pop(next(iter(self.write_results)))
+            ids.append(vid)
+        self.writes_applied += len(ids)
+        return ids
 
     # ------------------------------------------------------------------ #
     def next_wave(self) -> List[_Queued]:
@@ -95,6 +139,7 @@ class ContinuousBatcher:
         """Execute one wave through the batched planner/executor: the wave's
         requests (grouped by k/ef) hit ``query_batch``, whose planner
         coalesces same-state requests into shared plan entries."""
+        self._apply_writes()
         wave = self.next_wave()
         out: Dict[int, Response] = {}
         groups: Dict[Tuple[int, int], List[_Queued]] = {}
@@ -116,6 +161,6 @@ class ContinuousBatcher:
 
     def drain(self) -> Dict[int, Response]:
         out: Dict[int, Response] = {}
-        while self.pending():
+        while self.pending() or self._writes:
             out.update(self.run_wave())
         return out

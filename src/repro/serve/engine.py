@@ -15,6 +15,12 @@ Request flow (DESIGN.md §3):
 
 Requests accept predicate strings — ``"ab AND NOT (cd OR LIKE 'a%b_')"``
 — as well as plain CONTAINS patterns (parsed in core/predicate.py).
+
+Writes are first-class (DESIGN.md §4): ``insert`` lands in the index's
+delta runtime — an O(d) vector append plus automaton patch, never a
+runtime rebuild — and compaction folds the delta into a fresh generation
+behind the readers (``serve_batch`` snapshots one generation per wave, so
+an insert-triggered swap never splits a batch across generations).
 """
 
 from __future__ import annotations
@@ -84,10 +90,21 @@ class RetrievalEngine:
 
     # ------------------------------------------------------------------ #
     def insert(self, vector: np.ndarray, sequence: str) -> int:
+        """Delta-runtime write: amortized O(d) append, auto-compacted per
+        the index config's threshold (VectorMaton.maybe_compact)."""
         return self.index.insert(vector, sequence)
 
     def delete(self, vector_id: int) -> None:
         self.index.delete(vector_id)
+
+    def compact(self) -> None:
+        """Force-fold the write delta into a fresh generation (the
+        auto-compaction trigger normally handles this)."""
+        self.index.compact()
+
+    def maintenance_stats(self):
+        """Generation / delta / compaction counters (bench_churn)."""
+        return self.index.maintenance_stats()
 
     def checkpoint(self, path: str) -> None:
         self.index.save(path)

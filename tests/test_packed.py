@@ -207,12 +207,30 @@ def test_promotion_batched_query_parity(dataset):
         assert len(batched[r][1]) == 6
 
 
-def test_runtime_rebuilt_after_insert(dataset):
+def test_insert_lands_in_delta_not_rebuild(dataset):
+    """Write path (DESIGN.md §4): an insert must NOT invalidate the packed
+    generation — it lands in the delta and is queryable immediately; only
+    compact() produces a new runtime, which folds the id into the CSR."""
     vecs, seqs = dataset
     vm = _build(dataset, T=25)
     rt0 = vm.runtime
+    builds0 = vm.runtime_builds
     rng = np.random.default_rng(7)
     nid = vm.insert(rng.standard_normal(vecs.shape[1]).astype(np.float32),
                     "abab")
-    assert vm.runtime is not rt0       # re-flattened, not mutated in place
+    assert vm.runtime is rt0           # generation survives the insert
+    assert vm.runtime_builds == builds0
+    st = vm.esam.walk("abab")
+    # the id is visible through the delta (chain delta for frozen states,
+    # live V set for states created by this insert) and through queries
+    if st < rt0.n_states:
+        assert nid in rt0.chain_delta_ids(st).tolist()
+    d, ids = vm.query(vm.vectors[nid], "abab", 3)
+    assert nid in ids.tolist()
+    # compaction folds the delta into a fresh generation's CSR
+    vm.compact()
+    assert vm.runtime is not rt0
+    assert vm.runtime.delta.pending == 0
     assert nid in vm.runtime.chain_ids(vm.esam.walk("abab")).tolist()
+    d2, ids2 = vm.query(vm.vectors[nid], "abab", 3)
+    assert np.array_equal(ids, ids2)
