@@ -1,0 +1,169 @@
+"""Device-resident plan execution trajectory (DESIGN.md §3) — PR 4.
+
+Measures the steady-state query hot path on the jax backend: QPS and
+p50/p99 batch latency, host→device bytes shipped per batch (by class),
+kernel-launch and retrace counts — the four host round-trips this PR
+removed are visible as candidate-id bytes == 0 and steady-state
+retraces == 0.
+
+Writes the repo-root ``BENCH_PR4.json`` trajectory file.  With
+``--baseline <path>`` (what ``scripts/ci.sh`` runs) the PREVIOUS file is
+loaded first and the run FAILS if launch-per-batch, steady-state retrace,
+or executable counts regress against it — the benchmark is the gate.
+
+    PYTHONPATH=src python -m benchmarks.bench_device_exec --smoke \
+        --baseline BENCH_PR4.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core.vectormaton import VectorMaton, VectorMatonConfig
+from repro.kernels import ops
+
+from .common import emit, save_json
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+TRAJECTORY = os.path.join(REPO_ROOT, "BENCH_PR4.json")
+
+PREDS = ["a", "ab", "abc", "ba", "cd", "a OR cd", "b", "dc"]
+
+
+def _corpus(n: int, dim: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    seqs = ["".join(rng.choice(list("abcd"), size=rng.integers(5, 15)))
+            for _ in range(n)]
+    vecs = rng.standard_normal((n, dim)).astype(np.float32)
+    return vecs, seqs
+
+
+def run(n: int = 600, dim: int = 32, n_requests: int = 32,
+        batches: int = 10, k: int = 10, seed: int = 0) -> dict:
+    vecs, seqs = _corpus(n, dim, seed)
+    vm = VectorMaton(vecs, seqs,
+                     VectorMatonConfig(T=40, M=8, ef_con=50,
+                                       backend="jax"))
+    rng = np.random.default_rng(seed + 1)
+
+    def batch(size: int, shift: int):
+        preds = [PREDS[(shift + j) % len(PREDS)] for j in range(size)]
+        q = rng.standard_normal((size, dim)).astype(np.float32)
+        return q, preds
+
+    # ---- warm-up: populate the bucketed launch cache over a shape sweep
+    ops.reset_launch_stats()
+    for size in range(1, 21):
+        q, preds = batch(max(1, (size * n_requests) // 20), size)
+        vm.query_batch(q, preds, k)
+    warm = ops.launch_stats()
+
+    # ---- steady state: fixed-size batches must compile NOTHING new
+    # (retraces measured by actual jit-cache growth, the ground truth)
+    cache0 = sum(v for v in ops.jit_cache_sizes().values() if v > 0)
+    t0 = dict(vm.runtime.traffic)
+    lat: List[float] = []
+    served = 0
+    for b in range(batches):
+        q, preds = batch(n_requests, b)
+        t = time.perf_counter()
+        vm.query_batch(q, preds, k)
+        lat.append(time.perf_counter() - t)
+        served += n_requests
+    steady = ops.launch_stats()
+    cache1 = sum(v for v in ops.jit_cache_sizes().values() if v > 0)
+    t1 = vm.runtime.traffic
+    lat_ms = np.asarray(lat) * 1e3
+
+    def per_batch(key: str) -> float:
+        return (t1[key] - t0[key]) / batches
+
+    out = {
+        "config": {"n": n, "dim": dim, "n_requests": n_requests,
+                   "batches": batches, "k": k, "backend": "jax",
+                   "interpret_mode": True},
+        "qps": served / float(np.sum(lat)),
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "bytes_to_device_per_batch": per_batch("bytes_to_device"),
+        "candidate_id_bytes_per_batch": per_batch("candidate_id_bytes"),
+        "query_bytes_per_batch": per_batch("query_bytes"),
+        "descriptor_bytes_per_batch": per_batch("descriptor_bytes"),
+        "row_bytes_per_batch": per_batch("row_bytes"),
+        "mask_bytes_per_batch": per_batch("mask_bytes"),
+        "launches_per_batch": (steady["launches"] - warm["launches"])
+        / batches,
+        "steady_retraces": cache1 - cache0,
+        "executables": steady["executables"],
+    }
+    emit("device_exec/qps", 1e6 / out["qps"],
+         f"p50={out['p50_ms']:.1f}ms;p99={out['p99_ms']:.1f}ms")
+    emit("device_exec/launches_per_batch",
+         out["launches_per_batch"] * 1e3,
+         f"executables={out['executables']};"
+         f"retraces={out['steady_retraces']}")
+    emit("device_exec/bytes_per_batch",
+         out["bytes_to_device_per_batch"],
+         f"candidate_id={out['candidate_id_bytes_per_batch']:.0f}")
+    return out
+
+
+GATED = ["launches_per_batch", "steady_retraces", "executables"]
+
+
+def check_baseline(out: dict, path: str) -> List[str]:
+    """The recorded trajectory is the regression gate: the three
+    determinstic launch-economy metrics must not grow."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        base = json.load(f)
+    if base.get("config") != out.get("config"):
+        print(f"# baseline config differs; launch gate skipped",
+              file=sys.stderr)
+        return []
+    errs = []
+    for key in GATED:
+        if key in base and out[key] > base[key]:
+            errs.append(f"{key} regressed: {base[key]} -> {out[key]}")
+    return errs
+
+
+def main(smoke: bool = False, baseline: str | None = None) -> dict:
+    if smoke:
+        out = run(n=300, dim=16, n_requests=16, batches=6, k=8)
+    else:
+        out = run()
+    errs = check_baseline(out, baseline) if baseline else []
+    save_json("device_exec", out)
+    if errs:
+        # keep the committed baseline intact so the gate keeps firing
+        # until the regression is actually fixed
+        for e in errs:
+            print(f"# LAUNCH GATE FAILED: {e}", file=sys.stderr)
+        sys.exit(1)
+    with open(TRAJECTORY, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    assert out["candidate_id_bytes_per_batch"] == 0, \
+        "frozen-base workload shipped candidate ids"
+    assert out["steady_retraces"] == 0, \
+        "steady-state batches retraced XLA"
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--baseline", default=None,
+                    help="previous BENCH_PR4.json to gate launch/retrace "
+                         "counts against")
+    args = ap.parse_args()
+    main(smoke=args.smoke, baseline=args.baseline)

@@ -114,6 +114,76 @@ def run_batched(corpus: str = "words", scale: float = 0.25,
     return out
 
 
+def run_device_smoke(profile: bool = False, seed: int = 0) -> dict:
+    """Acceptance smoke for the device-resident executor (jax backend,
+    DESIGN.md §3): asserts (1) zero candidate-id bytes shipped for
+    frozen-base chain/scan sources, (2) one beam launch per graph size
+    bucket — not per state — and (3) a bounded executable count across a
+    20-shape batch sweep.  ``profile=True`` additionally prints the
+    host↔device traffic breakdown the gate reads."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(seed)
+    n, dim, k = 300, 16, 8
+    seqs = ["".join(rng.choice(list("abcd"), size=rng.integers(5, 15)))
+            for _ in range(n)]
+    vecs = rng.standard_normal((n, dim)).astype(np.float32)
+    preds = ["a", "ab", "abc", "ba", "a OR cd", "cd", "b", "dc"]
+
+    # (1) frozen-base chain/scan sources ship zero candidate-id bytes
+    vm_raw = VectorMaton(vecs, seqs,
+                         VectorMatonConfig(T=10 ** 9, backend="jax"))
+    q = rng.standard_normal((len(preds), dim)).astype(np.float32)
+    vm_raw.query_batch(q, preds, k)
+    tf = vm_raw.runtime.traffic
+    assert tf["candidate_id_bytes"] == 0, tf
+    assert tf["row_bytes"] == 0, tf
+
+    # (2) one beam launch per graph bucket, not per state
+    vm_g = VectorMaton(vecs, seqs,
+                       VectorMatonConfig(T=5, M=8, ef_con=50,
+                                         backend="jax"))
+    plan = vm_g.plan(preds)
+    states = {u for e in plan.entries for s in e.sources
+              for u in s.graph_states}
+    dev = vm_g.runtime.to_device()
+    buckets = {dev["graph_slot"][u][0] for u in states}
+    ops.reset_launch_stats()
+    vm_g.query_batch(q, preds, k)
+    stats = ops.launch_stats()
+    assert stats.get("graph_fused", 0) == len(buckets), (stats, buckets)
+    assert len(buckets) <= len(states)
+
+    # (3) bounded executables across a 20-shape batch sweep
+    ops.reset_launch_stats()
+    for size in range(1, 21):
+        mix = [preds[(size + j) % len(preds)] for j in range(size)]
+        qs = rng.standard_normal((size, dim)).astype(np.float32)
+        vm_g.query_batch(qs, mix, k)
+    stats = ops.launch_stats()
+    assert stats["executables"] <= 24, stats
+    assert stats["executables"] <= stats["launches"] // 4, stats
+    out = {"graph_states": len(states), "graph_buckets": len(buckets),
+           "sweep_launches": stats["launches"],
+           "sweep_executables": stats["executables"],
+           "traffic": dict(vm_g.runtime.traffic)}
+    emit("qps_recall/device_smoke", stats["launches"],
+         f"buckets={len(buckets)};executables={stats['executables']};"
+         f"frozen_candidate_id_bytes=0")
+    if profile:
+        batches = max(1, vm_g.runtime.traffic["batches"])
+        print("# host<->device traffic breakdown (per batch, padded "
+              "buckets as shipped):")
+        for key in ("query_bytes", "descriptor_bytes",
+                    "candidate_id_bytes", "row_bytes", "mask_bytes",
+                    "bytes_to_device"):
+            print(f"#   {key:>20}: {vm_g.runtime.traffic[key] / batches:10.1f} B")
+        print(f"#   {'launches/batch':>20}: "
+              f"{stats['launches'] / 20:10.2f}")
+    save_json("qps_recall_device_smoke", out)
+    return out
+
+
 def main():
     for corpus in ("spam", "words"):
         run(corpus)
@@ -121,4 +191,15 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="device-resident executor acceptance checks only")
+    ap.add_argument("--profile", action="store_true",
+                    help="print the host<->device traffic breakdown used "
+                         "by the acceptance gate")
+    args = ap.parse_args()
+    if args.smoke or args.profile:
+        run_device_smoke(profile=args.profile)
+    else:
+        main()

@@ -12,6 +12,9 @@ results/bench/.
   bench_ablation      Table 3  strategy ablation
   bench_kernels       —        fused distance+top-k kernel analysis
   bench_roofline      —        §Roofline table from the dry-run artifacts
+  bench_device_exec   —        device-resident executor trajectory: QPS,
+                               p50/p99, host→device bytes/batch, launch +
+                               retrace counts → repo-root BENCH_PR4.json
 """
 
 from __future__ import annotations
@@ -21,9 +24,9 @@ import sys
 import time
 import traceback
 
-from . import (bench_ablation, bench_index_size, bench_kernels,
-               bench_qps_recall, bench_roofline, bench_scalability,
-               bench_threshold)
+from . import (bench_ablation, bench_device_exec, bench_index_size,
+               bench_kernels, bench_qps_recall, bench_roofline,
+               bench_scalability, bench_threshold)
 
 ALL = [
     ("qps_recall", bench_qps_recall),
@@ -33,6 +36,7 @@ ALL = [
     ("ablation", bench_ablation),
     ("kernels", bench_kernels),
     ("roofline", bench_roofline),
+    ("device_exec", bench_device_exec),
 ]
 
 

@@ -38,6 +38,17 @@ PY
 # hold recall for every strategy it exercises
 python -m benchmarks.bench_selectivity --smoke
 
+# device-resident executor smoke (DESIGN.md §3): zero candidate-id bytes
+# for frozen-base chain/scan sources, one beam launch per graph bucket,
+# bounded executables across a 20-shape sweep; --profile prints the
+# host<->device traffic breakdown the gate reads
+python -m benchmarks.bench_qps_recall --smoke --profile
+
+# launch-economy gate: re-measure the BENCH_PR4.json trajectory and FAIL
+# if launch-per-batch / steady-retrace / executable counts regress
+# against the committed baseline (the file is then refreshed in place)
+python -m benchmarks.bench_device_exec --smoke --baseline BENCH_PR4.json
+
 # churn smoke (write path, DESIGN.md §4): records insert throughput and
 # QPS under a 10% write mix, and asserts that full runtime rebuilds
 # during churn equal the number of compactions — never the insert count —

@@ -209,3 +209,62 @@ def hnsw_search_batch(vectors, ids, level0, entry, queries, *, k, ef,
                            max_iter=max_iter, metric=metric)
     return jax.vmap(
         lambda q: fn(vectors, ids, level0, entry, q, allowed))(queries)
+
+
+# --------------------------------------------------------------------- #
+# fused multi-graph beam search (DESIGN.md §3): one launch per size
+# bucket, vmapped over (graph, query) pairs on stacked matrices
+# --------------------------------------------------------------------- #
+
+def _check_beam_capacity(k: int, ef: int) -> None:
+    """The beam's ef-list is the only result store: asking for more than
+    ``ef`` results can only ever return (+inf, -1) padding past ef, so the
+    executor's tombstone over-fetch must stay within this bound
+    (DESIGN.md §3)."""
+    if k > ef:
+        raise ValueError(
+            f"k={k} exceeds the beam's ef-list capacity ef={ef}: slots "
+            "past ef can never be filled.  Clamp the over-fetch to ef (the "
+            "executor does) or raise ef_search")
+
+
+@functools.partial(jax.jit, static_argnames=("k", "ef", "max_iter",
+                                             "metric"))
+def hnsw_search_fused(vectors, ids, level0, entry, gidx, queries, *, k, ef,
+                      max_iter=None, metric="l2"):
+    """Beam search vmapped over (graph, query) PAIRS of one size bucket.
+
+    ``ids``: (G, n_max) local-slot→global-id stacks (0-padded — padded
+    slots are unreachable: the walk only enters a slot via the entry point
+    or a neighbour edge, and padded slots have neither); ``level0``:
+    (G, n_max, 2M); ``entry``: (G,); ``gidx``: (P,) graph index per pair;
+    ``queries``: (P, d).  One launch serves every request against every
+    graph state in the bucket — the per-state launch loop this replaces
+    cost one trace + one dispatch per (state, filter) combination.
+    """
+    _check_beam_capacity(k, ef)
+
+    def one(g, q):
+        return hnsw_search(vectors, ids[g], level0[g], entry[g], q, k=k,
+                           ef=ef, max_iter=max_iter, metric=metric)
+
+    return jax.vmap(one)(gidx, queries)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "ef", "max_iter",
+                                             "metric"))
+def hnsw_search_fused_filtered(vectors, ids, level0, entry, masks, midx,
+                               gidx, queries, *, k, ef, max_iter=None,
+                               metric="l2"):
+    """Filtered variant of ``hnsw_search_fused``: pair p searches graph
+    ``gidx[p]`` under candidate bitmap ``masks[midx[p]]`` ((Mn, V) bool
+    over global ids — one row per DISTINCT mask, so conjunction sources
+    sharing a bitmap ship it once per batch, not once per pair)."""
+    _check_beam_capacity(k, ef)
+
+    def one(g, m, q):
+        return hnsw_search_filtered(vectors, ids[g], level0[g], entry[g],
+                                    q, masks[m], k=k, ef=ef,
+                                    max_iter=max_iter, metric=metric)
+
+    return jax.vmap(one)(gidx, midx, queries)

@@ -13,28 +13,40 @@ flattens them into struct-of-arrays form:
     segments is exactly V_state (Lemma 4);
   * per-graph padded neighbour matrices (``HNSW.pack()``) kept by state.
 
-Query execution splits into a host **planner** and a device **executor**
-over *compiled predicates* (core/predicate.py):
+Query execution splits into a host **planner** and a device-resident
+**executor** over *compiled predicates* (core/predicate.py, DESIGN.md §3):
 
   * ``PackedRuntime.plan`` coalesces requests with identical predicate keys
     into one ``PlanEntry`` carrying the predicate's compiled sources —
-    chain covers, explicit id sets, composed membership masks, residual
-    verifiers — no per-state Python objects survive into execution;
-  * ``PackedRuntime.execute`` answers the whole batch: ALL brute-force
-    candidate sets across ALL entries/sources go through ONE segmented
-    fused distance+top-k call (``ops.topk_segmented``), graph states run
-    vmapped beam searches (optionally consulting a candidate bitmap
-    in-loop for ``filtered_graph`` sources), and ``residual`` sources run
-    an over-fetch + exact host-side verification loop until k verified
-    hits.  Per-request merge dedups ids across OR disjuncts, applies the
-    tombstone filter, and cuts to k.
+    chain covers as CSR *descriptor ranges*, explicit id sets, composed
+    membership masks, residual verifiers — no per-state Python objects
+    survive into execution;
+  * ``PackedRuntime.execute`` answers the whole batch touching the host
+    only for planning integers and the final (k,) results: ALL
+    brute-force candidate sets go through ONE descriptor-driven segmented
+    distance+top-k launch (``ops.topk_segmented_desc`` — frozen covers
+    resolve against the device-resident CSR, zero candidate-id upload;
+    only post-watermark delta tails ship ids + rows), graph states run
+    ONE fused beam launch per size bucket vmapped over (graph, query)
+    pairs (conjunction bitmaps stacked per distinct mask; tombstone
+    over-fetch clamped at the beam's ef capacity, past which the resident
+    deleted bitmap filters in-loop), ``residual`` sources run an
+    over-fetch + exact host-side verification loop until k verified hits,
+    and the per-request merge — dedup across OR disjuncts, tombstone
+    filter, cut to k — folds on device (``ops.merge_topk_device``) for
+    requests whose parts are all launch rows.  Every dynamic dimension is
+    power-of-two bucketed, so steady-state serving replays a fixed
+    executable set (launch/retrace counters in ``kernels.ops``, traffic
+    counters in ``PackedRuntime.traffic``).
 
 Device placement (DESIGN.md §2): ``to_device()`` uploads the vector table,
-the base-ID CSR, the per-graph matrices, and a deleted-mask exactly once;
-queries afterwards ship only the plan — candidate id lists and masks, the
-same order of magnitude as the per-batch distance work itself.  The host
-backend runs the same plan with NumPy kernels so results are
-backend-independent for brute-forced sources.
+the base-ID CSR, a deleted-mask, and the graph matrices (per state and as
+size-bucketed stacks) exactly once; queries afterwards ship only the
+plan's integers, the query rows, and the bounded delta tail.  The host
+backend runs the same plan with NumPy kernels and a NumPy merge — the
+bit-exactness oracle for every device stage (the ``use_descriptors`` /
+``fuse_graphs`` / ``device_merge`` toggles force the legacy paths for
+parity tests).
 
 Write path (DESIGN.md §4): a built ``PackedRuntime`` is an immutable
 **generation**.  Inserts never touch its arrays — they land in the
@@ -233,6 +245,18 @@ class PackedRuntime:
         self._dev_n = 0                     # vector count at upload time
         # predicate key -> (delta version at compile, compiled predicate)
         self._pred_cache: Dict[str, Tuple[int, CompiledPredicate]] = {}
+        # device-resident execution (DESIGN.md §3).  The three toggles are
+        # parity escape hatches: each False routes that stage through the
+        # legacy host-mediated path, which tests/test_device_exec.py uses
+        # as the bit-exactness oracle for the device-resident path.
+        self.use_descriptors = True     # CSR descriptors vs host id upload
+        self.fuse_graphs = True         # bucket-fused vs per-state beams
+        self.device_merge = True        # device vs host per-request merge
+        # host→device traffic accounting, per batch class (bench gate)
+        self.traffic: Dict[str, int] = {
+            "batches": 0, "bytes_to_device": 0, "candidate_id_bytes": 0,
+            "query_bytes": 0, "descriptor_bytes": 0, "row_bytes": 0,
+            "mask_bytes": 0}
 
     # ------------------------------------------------------------------ #
     # construction
@@ -285,15 +309,49 @@ class PackedRuntime:
         """Upload the packed arrays once; reused by every later batch.
         ``_dev_n`` records the row count at upload time — delta rows
         appended later are shipped per batch by the executor's
-        watermark-split gather, never by re-uploading the table."""
+        watermark-split gather, never by re-uploading the table.
+
+        Graph matrices upload twice over: per state (legacy per-graph
+        path, parity oracle) and as size-bucketed ``(G, n_max, 2M)``
+        stacks (``graph_buckets``) that the fused executor vmaps one beam
+        launch over per bucket.  ``graph_slot`` maps a state to its
+        (bucket key, stack row).  Stack padding: ids 0 / neighbours -1 —
+        padded slots are unreachable (no entry point or edge leads to
+        them), asserted by the fused-vs-per-graph parity test."""
         if self._dev is None:
             import jax
             import jax.numpy as jnp
+
+            from ..kernels import ops
             self._dev_n = len(self.vectors)
             dmask = np.zeros(self._dev_n, dtype=bool)
             if self.deleted:
                 gone = [i for i in self.deleted if i < self._dev_n]
                 dmask[gone] = True
+            by_bucket: Dict[Tuple[int, int], List[int]] = {}
+            for u, pk in self.graphs.items():
+                bkey = (ops.bucket(len(pk["ids"]), 8),
+                        pk["level0"].shape[1])
+                by_bucket.setdefault(bkey, []).append(u)
+            buckets: Dict[Tuple[int, int], dict] = {}
+            slots: Dict[int, Tuple[Tuple[int, int], int]] = {}
+            for bkey, states in by_bucket.items():
+                n_pad, width = bkey
+                g = len(states)
+                ids = np.zeros((g, n_pad), np.int32)
+                lvl = np.full((g, n_pad, width), -1, np.int32)
+                ent = np.zeros(g, np.int32)
+                for j, u in enumerate(states):
+                    pk = self.graphs[u]
+                    ids[j, :len(pk["ids"])] = pk["ids"]
+                    lvl[j, :len(pk["level0"])] = pk["level0"]
+                    ent[j] = pk["entry"][0]
+                    slots[u] = (bkey, j)
+                buckets[bkey] = {
+                    "ids": jax.device_put(jnp.asarray(ids)),
+                    "level0": jax.device_put(jnp.asarray(lvl)),
+                    "entry": jax.device_put(jnp.asarray(ent)),
+                }
             self._dev = {
                 "vectors": jax.device_put(jnp.asarray(self.vectors)),
                 "base_ids": jax.device_put(
@@ -304,6 +362,8 @@ class PackedRuntime:
                         "level0": jax.device_put(jnp.asarray(pk["level0"])),
                         "entry": jax.device_put(jnp.asarray(pk["entry"][0]))}
                     for u, pk in self.graphs.items()},
+                "graph_buckets": buckets,
+                "graph_slot": slots,
             }
         return self._dev
 
@@ -426,12 +486,25 @@ class PackedRuntime:
                 ef_search: int = 64
                 ) -> List[Tuple[np.ndarray, np.ndarray]]:
         """Answer every request in the plan; returns [(dists, ids)] aligned
-        with the request batch.  Device (jax) backend: one segmented kernel
-        launch for all brute-forced candidate sets + one vmapped beam
-        search per shared graph (bitmap-filtered for conjunctions).  Host
-        (numpy) backend: same plan, NumPy kernels.  ``residual`` sources
-        (multi-segment LIKE, negated LIKE) run an over-fetch + host-verify
-        loop on either backend."""
+        with the request batch.
+
+        Device (jax) backend — the warm path touches the host only for
+        planning integers and the final (k,) results (DESIGN.md §3):
+
+          * ONE descriptor-driven segmented kernel launch for every
+            brute-forced candidate set (frozen chain covers resolve
+            against the resident CSR on device; only delta tails past the
+            upload watermark ship per batch);
+          * ONE fused beam launch per graph size bucket, vmapped over
+            (graph, query) pairs — not one per state — with the tombstone
+            over-fetch clamped at the beam's ef-list capacity (past it
+            the resident deleted bitmap filters in-loop instead);
+          * ONE device-side merge (segmented dedup + top-k fold) for all
+            requests whose parts are device launch rows; requests with
+            host-side parts (``residual`` verification) merge on host.
+
+        Host (numpy) backend: same plan, NumPy kernels, host merge — the
+        bit-exactness oracle for every device stage."""
         if plan.generation != self.generation:
             raise ValueError(
                 f"stale plan: compiled against generation "
@@ -453,28 +526,74 @@ class PackedRuntime:
             return out
         parts: List[List[Tuple[np.ndarray, np.ndarray]]] = [
             [] for _ in range(plan.n_requests)]
+        launches: List[Tuple[object, object]] = []   # (vals, gids) on device
+        dev_parts: List[List[Tuple[int, int]]] = [
+            [] for _ in range(plan.n_requests)]      # (launch idx, row)
         scan_items, graph_shared, graph_filtered, residual_items = (
             self._gather_work(plan))
         if self.backend == "jax":
+            self.traffic["batches"] += 1
             if self.quantize == "sq8":
-                self._execute_scan_sq8(queries, scan_items, k, parts)
+                self._execute_scan_sq8(queries, scan_items, k, launches,
+                                       dev_parts)
             else:
-                self._execute_scan_device(queries, scan_items, k, parts)
+                self._execute_scan_device(queries, scan_items, k, launches,
+                                          dev_parts)
             self._execute_graphs_device(queries, graph_shared, graph_filtered,
-                                        k, ef_search, parts)
+                                        k, ef_search, launches, dev_parts)
         else:
             self._execute_scan_host(queries, scan_items, k, parts)
             self._execute_graphs_host(queries, graph_shared, graph_filtered,
                                       k, ef_search, parts)
         for e, s in residual_items:
             self._execute_residual(queries, e, s, k, parts)
-        for r in range(plan.n_requests):
-            if not parts[r]:
+        self._merge(plan, launches, dev_parts, parts, k, out)
+        return out
+
+    def _merge(self, plan: QueryPlan, launches, dev_parts, parts, k: int,
+               out) -> None:
+        """Per-request merge: dedup ids across OR disjuncts / overlapping
+        sources (keep the closest), drop tombstones, cut to k.  Requests
+        whose parts are all device launch rows fold on device in one
+        ``merge_topk_device`` call; the rest — host backend, or residual
+        parts present — run the NumPy merge, which is the bit-exactness
+        oracle (``device_merge=False`` forces it everywhere)."""
+        n = plan.n_requests
+        dev_only: List[int] = []
+        if launches and self.device_merge:
+            dev_only = [r for r in range(n)
+                        if dev_parts[r] and not parts[r]]
+        if dev_only:
+            self._merge_device(dev_only, launches, dev_parts, k, out)
+        done = set(dev_only)
+        conv: List[Optional[Tuple[np.ndarray, np.ndarray]]] = (
+            [None] * len(launches))
+
+        def _host_rows(li: int) -> Tuple[np.ndarray, np.ndarray]:
+            if conv[li] is None:
+                v, g = launches[li]
+                conv[li] = (np.asarray(v), np.asarray(g))
+            return conv[li]
+
+        for r in range(n):
+            if r in done:
                 continue
-            d = np.concatenate([p[0] for p in parts[r]])
-            i = np.concatenate([p[1] for p in parts[r]])
+            host_parts = parts[r]
+            if dev_parts[r]:
+                pre = []
+                for li, row in dev_parts[r]:
+                    v, g = _host_rows(li)
+                    valid = g[row] >= 0
+                    pre.append((v[row][valid],
+                                g[row][valid].astype(np.int64)))
+                host_parts = pre + host_parts
+            if not host_parts:
+                continue
+            d = np.concatenate([p[0] for p in host_parts])
+            i = np.concatenate([p[1] for p in host_parts])
             if self.deleted:
-                keep = ~np.isin(i, np.fromiter(self.deleted, dtype=np.int64))
+                keep = ~np.isin(i, np.fromiter(self.deleted,
+                                               dtype=np.int64))
                 d, i = d[keep], i[keep]
             order = np.argsort(d, kind="stable")
             d, i = d[order], i[order]
@@ -485,11 +604,62 @@ class PackedRuntime:
                 keep[first] = True
                 d, i = d[keep], i[keep]
             out[r] = (d[:k], i[:k])
-        return out
+
+    def _merge_device(self, reqs: List[int], launches, dev_parts, k: int,
+                      out) -> None:
+        """Stack this batch's launch outputs into one (T, W) pool, gather
+        each request's rows by index matrix, and fold dedup + top-k on
+        device — replacing the per-request Python concatenate/argsort
+        loop with one bucketed launch and ONE (R, k) transfer back."""
+        import jax.numpy as jnp
+
+        from ..kernels import ops
+        dev = self.to_device()
+        w = max(int(v.shape[1]) for v, _ in launches)
+        pd, pi, offs = [], [], []
+        t = 0
+        for v, g in launches:
+            if int(v.shape[1]) < w:
+                v = jnp.pad(v, ((0, 0), (0, w - int(v.shape[1]))),
+                            constant_values=np.inf)
+                g = jnp.pad(g, ((0, 0), (0, w - int(g.shape[1]))),
+                            constant_values=-1)
+            pd.append(v)
+            pi.append(g)
+            offs.append(t)
+            t += int(v.shape[0])
+        t_pad = ops.bucket(t + 1, 8)
+        big_d = jnp.pad(jnp.concatenate(pd, axis=0),
+                        ((0, t_pad - t), (0, 0)), constant_values=np.inf)
+        big_i = jnp.pad(jnp.concatenate(pi, axis=0),
+                        ((0, t_pad - t), (0, 0)), constant_values=-1)
+        s_max = ops.bucket(max(len(dev_parts[r]) for r in reqs), 1)
+        r_pad = ops.bucket(len(reqs), 8)
+        sel = np.full((r_pad, s_max), t_pad - 1, np.int32)   # padding row
+        for j, r in enumerate(reqs):
+            for s, (li, row) in enumerate(dev_parts[r]):
+                sel[j, s] = offs[li] + row
+        delmask = (dev["deleted"] if self._dev_n
+                   else jnp.zeros(1, dtype=bool))
+        md, mi = ops.merge_topk_device(big_d, big_i, jnp.asarray(sel),
+                                       delmask, k)
+        ops.record_launch("merge", (t_pad, s_max, w, r_pad, k))
+        md, mi = np.asarray(md), np.asarray(mi)
+        for j, r in enumerate(reqs):
+            valid = mi[j] >= 0
+            out[r] = (md[j][valid], mi[j][valid].astype(np.int64))
 
     def _gather_work(self, plan: QueryPlan):
-        """Split the plan into the executor's four work classes."""
-        scan_items: List[Tuple[PlanEntry, np.ndarray]] = []
+        """Split the plan into the executor's four work classes.
+
+        Scan items are ``(entry, frozen CSR segments, explicit tail
+        ids)``: the device executor resolves the segments as descriptors
+        against the resident CSR (zero candidate-id upload), the host
+        executor materializes both.  Tails hold everything that is not a
+        frozen segment — delta inserts, masked conjunction survivors,
+        post-freeze state V sets."""
+        scan_items: List[Tuple[PlanEntry, List[Tuple[int, int]],
+                               np.ndarray]] = []
         graph_shared: Dict[int, List[int]] = {}
         graph_filtered: List[Tuple[int, np.ndarray, List[int]]] = []
         residual_items: List[Tuple[PlanEntry, CompiledSource]] = []
@@ -498,17 +668,14 @@ class PackedRuntime:
                 delta = (s.delta_ids if s.delta_ids is not None
                          and len(s.delta_ids) else None)
                 if s.strategy == "chain":
-                    parts = [self.base_ids[lo:hi]
-                             for lo, hi in s.raw_segments]
-                    if delta is not None:
-                        parts.append(delta)      # brute-forced with the raws
-                    if parts:
-                        scan_items.append((e, np.concatenate(parts)))
+                    tail = delta if delta is not None else _EMPTY_I
+                    if s.raw_segments or len(tail):
+                        scan_items.append((e, list(s.raw_segments), tail))
                     for u in s.graph_states:
                         graph_shared.setdefault(u, []).extend(e.requests)
                 elif s.strategy == "scan":
                     if len(s.ids):
-                        scan_items.append((e, s.ids))
+                        scan_items.append((e, [], s.ids))
                 elif s.strategy == "filtered_graph":
                     parts = []
                     if s.raw_segments:
@@ -521,7 +688,7 @@ class PackedRuntime:
                     if delta is not None:     # host-verified at compile time
                         parts.append(delta)
                     if parts:
-                        scan_items.append((e, np.concatenate(parts)))
+                        scan_items.append((e, [], np.concatenate(parts)))
                     for u in s.graph_states:
                         graph_filtered.append((u, s.allowed, e.requests))
                 elif s.strategy == "residual":
@@ -537,17 +704,6 @@ class PackedRuntime:
             cand = cand[~np.isin(
                 cand, np.fromiter(self.deleted, dtype=np.int64))]
         return cand
-
-    def _live_tail(self, cand: np.ndarray, watermark: int) -> np.ndarray:
-        """Drop tombstoned candidates past the device-upload watermark —
-        the resident deleted-mask only covers rows that were uploaded."""
-        if not self.deleted:
-            return cand
-        tail = cand >= watermark
-        if not tail.any():
-            return cand
-        drop = tail & np.isin(cand, np.fromiter(self.deleted, np.int64))
-        return cand[~drop]
 
     def _device_rows(self, cand_np: np.ndarray):
         """(len(cand), d) rows on device: base rows gathered from the
@@ -570,8 +726,11 @@ class PackedRuntime:
 
     def _execute_scan_host(self, queries, scan_items, k, parts) -> None:
         from ..kernels import ops
-        for e, cand in scan_items:
-            cand = self._live(cand)
+        for e, segs, tail in scan_items:
+            chunks = [self.base_ids[lo:hi] for lo, hi in segs]
+            if len(tail):
+                chunks.append(tail)
+            cand = self._live(np.concatenate(chunks))
             if len(cand) == 0:
                 continue
             sub = self.vectors[cand]
@@ -581,72 +740,130 @@ class PackedRuntime:
                 valid = li[row] >= 0
                 parts[r].append((d[row][valid], cand[li[row][valid]]))
 
-    def _execute_scan_device(self, queries, scan_items, k, parts) -> None:
-        """ONE segmented Pallas launch for every brute-forced candidate set
-        in the batch — chain raw segments, OR-union scans, masked
-        conjunction scans alike.  Entries with several sources expand into
-        one query row per (request, source) pair."""
-        import jax.numpy as jnp
+    def _assemble_scan_batch(self, queries, scan_items):
+        """Flatten the batch's scan items into one descriptor launch:
+        frozen CSR segments become ``(start, len, owner)`` triples; tails
+        split at the upload watermark into resident ids (device-gathered,
+        device-tombstoned) and shipped ids (+ their rows — only the
+        post-watermark delta ever ships).  ``use_descriptors=False``
+        demotes every segment to explicit ids (the legacy
+        candidate-upload path, kept as the parity oracle)."""
         from ..kernels import ops
         if not scan_items:
-            return
-        dev = self.to_device()
+            return None
+        self.to_device()
         dn = self._dev_n
         q_rows: List[int] = []
         q_owner: List[int] = []
-        cand_chunks: List[np.ndarray] = []
-        cseg_chunks: List[np.ndarray] = []
-        for owner, (e, cand) in enumerate(scan_items):
-            cand = self._live_tail(cand, dn)
-            cand_chunks.append(cand)
-            cseg_chunks.append(np.full(len(cand), owner, dtype=np.int32))
+        dstarts: List[int] = []
+        dlens: List[int] = []
+        downers: List[int] = []
+        tres: List[np.ndarray] = []
+        tres_o: List[np.ndarray] = []
+        tship: List[np.ndarray] = []
+        tship_o: List[np.ndarray] = []
+        id_bytes = 0
+        for owner, (e, segs, tail) in enumerate(scan_items):
+            if not self.use_descriptors and segs:
+                chunks = [self.base_ids[lo:hi] for lo, hi in segs]
+                if len(tail):
+                    chunks.append(tail)
+                tail = np.concatenate(chunks)
+                segs = []
+            for lo, hi in segs:
+                dstarts.append(lo)
+                dlens.append(hi - lo)
+                downers.append(owner)
+            if len(tail):
+                tail = np.asarray(tail, dtype=np.int64)
+                res = tail[tail < dn]
+                ship = tail[tail >= dn]
+                if len(ship) and self.deleted:   # past the resident mask
+                    ship = ship[~np.isin(
+                        ship, np.fromiter(self.deleted, np.int64))]
+                if len(res):
+                    tres.append(res.astype(np.int32))
+                    tres_o.append(np.full(len(res), owner, np.int32))
+                if len(ship):
+                    tship.append(ship.astype(np.int32))
+                    tship_o.append(np.full(len(ship), owner, np.int32))
             q_rows.extend(e.requests)
             q_owner.extend([owner] * len(e.requests))
-        cand_np = np.concatenate(cand_chunks)
-        if len(cand_np) == 0:
-            return
-        cand_dev = jnp.asarray(cand_np, jnp.int32)
-        y = self._device_rows(cand_np)
-        # tombstoned base candidates: reassign to an unmatchable owner on
-        # device (delta candidates were already filtered host-side above)
-        if dn == 0:
-            cdel = jnp.zeros(len(cand_np), dtype=bool)
-        else:
-            cdel = (dev["deleted"][jnp.minimum(cand_dev, dn - 1)]
-                    & (cand_dev < dn))
-        cseg = jnp.asarray(np.concatenate(cseg_chunks))
-        cseg = jnp.where(cdel, -3, cseg)
-        v, li = ops.topk_segmented(jnp.asarray(queries[q_rows]), y,
-                                   jnp.asarray(np.asarray(q_owner,
-                                                          np.int32)),
-                                   cseg, k, metric=self.metric)
-        v = np.asarray(v)
-        li = np.asarray(li)
-        for row, r in enumerate(q_rows):
-            valid = li[row] >= 0
-            parts[r].append((v[row][valid], cand_np[li[row][valid]]))
+        cat = (lambda xs: np.concatenate(xs) if xs
+               else np.empty(0, np.int32))
+        tres_i, tres_ow = cat(tres), cat(tres_o)
+        tship_i, tship_ow = cat(tship), cat(tship_o)
+        nd = sum(dlens)
+        if nd + len(tres_i) + len(tship_i) == 0:
+            return None
+        rows = (self.vectors[tship_i.astype(np.int64)] if len(tship_i)
+                else np.empty((0, queries.shape[1]), np.float32))
+        # traffic accounting mirrors the padded buckets actually shipped
+        d_dim = queries.shape[1]
+        qp = ops.bucket(len(q_rows))
+        dp = ops.bucket(len(dstarts), 8) if nd else 0
+        tr, ts = ops.bucket(len(tres_i)), ops.bucket(len(tship_i))
+        tf = self.traffic
+        tf["query_bytes"] += qp * (d_dim * 4 + 4)
+        tf["descriptor_bytes"] += dp * 12
+        tf["candidate_id_bytes"] += (tr + ts) * 8    # ids + owner ids
+        tf["row_bytes"] += ts * d_dim * 4
+        tf["bytes_to_device"] += (qp * (d_dim * 4 + 4) + dp * 12
+                                  + (tr + ts) * 8 + ts * d_dim * 4)
+        return (q_rows, np.asarray(q_owner, np.int32),
+                np.asarray(dstarts, np.int32), np.asarray(dlens, np.int32),
+                np.asarray(downers, np.int32), tres_i, tres_ow,
+                tship_i, tship_ow, rows)
 
-    def _execute_scan_sq8(self, queries, scan_items, k, parts) -> None:
-        """Opt-in SQ8 backend (``VectorMatonConfig.quantize='sq8'``): each
-        candidate set runs the quantized scan + fp32 rerank instead of the
-        fp32 segmented kernel.  Overfetch is clamped so k·overfetch stays
+    def _execute_scan_device(self, queries, scan_items, k, launches,
+                             dev_parts) -> None:
+        """ONE descriptor-driven segmented Pallas launch for every
+        brute-forced candidate set in the batch — chain raw segments,
+        OR-union scans, masked conjunction scans alike.  Entries with
+        several sources expand into one query row per (request, source)
+        pair; outputs stay on device for the merge fold."""
+        from ..kernels import ops
+        flat = self._assemble_scan_batch(queries, scan_items)
+        if flat is None:
+            return
+        (q_rows, q_owner, dstarts, dlens, downers, tres_i, tres_ow,
+         tship_i, tship_ow, rows) = flat
+        dev = self.to_device()
+        v, g = ops.topk_segmented_desc(
+            dev["vectors"], dev["base_ids"], dev["deleted"],
+            queries[q_rows], q_owner, dstarts, dlens, downers,
+            tres_i, tres_ow, tship_i, rows, tship_ow, k,
+            metric=self.metric)
+        li = len(launches)
+        launches.append((v, g))
+        for row, r in enumerate(q_rows):
+            dev_parts[r].append((li, row))
+
+    def _execute_scan_sq8(self, queries, scan_items, k, launches,
+                          dev_parts) -> None:
+        """Opt-in SQ8 backend (``VectorMatonConfig.quantize='sq8'``): the
+        whole batch's candidate sets run ONE segmented quantized launch +
+        fp32 rerank — same descriptor/tail assembly as the fp32 path (the
+        per-item launch loop this replaces paid a trace + candidate
+        upload per scan item).  Overfetch is clamped so k·overfetch stays
         inside the rerank kernel's 128-lane budget."""
-        import jax.numpy as jnp
-        from ..kernels.quant import topk_sq8_rerank
+        from ..kernels.quant import topk_sq8_segmented_desc
         overfetch = max(1, min(4, 128 // max(k, 1)))
-        for e, cand in scan_items:
-            cand = self._live(cand)
-            if len(cand) == 0:
-                continue
-            kk = min(k, len(cand))
-            v, li = topk_sq8_rerank(jnp.asarray(queries[e.requests]),
-                                    jnp.asarray(self.vectors[cand]), kk,
-                                    overfetch=overfetch)
-            v = np.asarray(v)
-            li = np.asarray(li)
-            for row, r in enumerate(e.requests):
-                valid = li[row] >= 0
-                parts[r].append((v[row][valid], cand[li[row][valid]]))
+        flat = self._assemble_scan_batch(queries, scan_items)
+        if flat is None:
+            return
+        (q_rows, q_owner, dstarts, dlens, downers, tres_i, tres_ow,
+         tship_i, tship_ow, rows) = flat
+        dev = self.to_device()
+        v, g = topk_sq8_segmented_desc(
+            dev["vectors"], dev["base_ids"], dev["deleted"],
+            queries[q_rows], q_owner, dstarts, dlens, downers,
+            tres_i, tres_ow, tship_i, rows, tship_ow, k,
+            overfetch=overfetch)
+        li = len(launches)
+        launches.append((v, g))
+        for row, r in enumerate(q_rows):
+            dev_parts[r].append((li, row))
 
     # ---- graph states ------------------------------------------------- #
 
@@ -663,45 +880,162 @@ class PackedRuntime:
                 d, i = g.search(queries[r], k, ef_search, allowed=allowed)
                 parts[r].append((d, i))
 
+    def _graph_fetch_width(self, k: int, ef_search: int
+                           ) -> Tuple[int, int, bool]:
+        """Tombstone over-fetch policy (DESIGN.md §3): over-fetch
+        ``k + |deleted|`` rounded to a lane multiple, but NEVER past the
+        beam's ef-list capacity — slots past ef can only be padding, and
+        the old unbounded ``k + len(deleted)`` silently widened the beam
+        (and retraced) per tombstone.  Past the capacity the executor
+        switches to in-loop bitmap filtering (tombstones skipped in-scan,
+        no over-fetch at all).  Returns (kk, ef_cap, bitmap_tombs)."""
+        ef_cap = max(ef_search, k)
+        n_del = len(self.deleted)
+        if n_del == 0:
+            return k, ef_cap, False
+        if k + n_del <= ef_cap:
+            return min(((k + n_del + 7) // 8) * 8, ef_cap), ef_cap, False
+        return k, ef_cap, True
+
     def _execute_graphs_device(self, queries, graph_shared, graph_filtered,
-                               k, ef_search, parts) -> None:
+                               k, ef_search, launches, dev_parts) -> None:
+        """Beam searches, one fused launch per graph size bucket: all
+        (graph, query) pairs against same-bucket states vmap together —
+        filtered pairs (conjunction bitmaps, or the tombstone bitmap when
+        the over-fetch clamp binds) in a second launch per bucket with the
+        DISTINCT masks stacked once.  ``fuse_graphs=False`` falls back to
+        one launch per state (the parity oracle)."""
         import jax.numpy as jnp
-        from .hnsw_jax import hnsw_search_batch
+
+        from ..kernels import ops
+        from .hnsw_jax import (hnsw_search_batch, hnsw_search_fused,
+                               hnsw_search_fused_filtered)
+        if not graph_shared and not graph_filtered:
+            return
         dev = self.to_device()
-        # Over-fetch when tombstones exist so the post-merge filter can
-        # still fill k live results (host search skips them in-scan).
-        kk = k if not self.deleted else min(max(ef_search, k),
-                                            k + len(self.deleted))
-        for u, reqs in graph_shared.items():
-            h = dev["graphs"][u]
-            d, i = hnsw_search_batch(
-                dev["vectors"], h["ids"], h["level0"], h["entry"],
-                jnp.asarray(queries[reqs]), k=kk, ef=max(ef_search, kk),
-                metric=self.metric)
-            d = np.asarray(d)
-            i = np.asarray(i, dtype=np.int64)
+        dn = self._dev_n
+        kk, ef_cap, bitmap_tombs = self._graph_fetch_width(k, ef_search)
+        d_dim = queries.shape[1]
+
+        def emit(vals, gids, reqs):
+            li = len(launches)
+            launches.append((vals, gids))
             for row, r in enumerate(reqs):
-                valid = i[row] >= 0
-                parts[r].append((d[row][valid], i[row][valid]))
-        for u, allowed, reqs in graph_filtered:
-            h = dev["graphs"][u]
-            # tombstones composed into the candidate bitmap: the filtered
-            # fold only admits allowed nodes, so k slots stay live.  The
-            # frozen graph only holds pre-watermark nodes, so the mask is
-            # cut to the resident table's length.
+                dev_parts[r].append((li, row))
+
+        def compose_mask(allowed: Optional[np.ndarray]) -> np.ndarray:
+            """(dn,) bool: candidate bitmap ∧ ¬tombstones, host-composed.
+            ``None`` means tombstones-only (the clamp fallback)."""
+            dmask = np.zeros(dn, dtype=bool)
+            if self.deleted:
+                gone = [i for i in self.deleted if i < dn]
+                dmask[gone] = True
+            if allowed is None:
+                return ~dmask
             am = allowed
-            if len(am) < self._dev_n:
-                am = np.pad(am, (0, self._dev_n - len(am)))
-            amask = jnp.asarray(am[:self._dev_n]) & ~dev["deleted"]
-            d, i = hnsw_search_batch(
-                dev["vectors"], h["ids"], h["level0"], h["entry"],
-                jnp.asarray(queries[reqs]), k=k, ef=max(ef_search, k),
-                metric=self.metric, allowed=amask)
-            d = np.asarray(d)
-            i = np.asarray(i, dtype=np.int64)
-            for row, r in enumerate(reqs):
-                valid = i[row] >= 0
-                parts[r].append((d[row][valid], i[row][valid]))
+            if len(am) < dn:
+                am = np.pad(am, (0, dn - len(am)))
+            return am[:dn] & ~dmask
+
+        if not self.fuse_graphs:
+            # legacy per-state launches (parity oracle for the fused path)
+            al = (jnp.asarray(compose_mask(None)) if bitmap_tombs
+                  else None)
+            for u, reqs in graph_shared.items():
+                h = dev["graphs"][u]
+                d, i = hnsw_search_batch(
+                    dev["vectors"], h["ids"], h["level0"], h["entry"],
+                    jnp.asarray(queries[reqs]),
+                    k=(k if bitmap_tombs else kk), ef=ef_cap,
+                    metric=self.metric, allowed=al)
+                ops.record_launch(
+                    "graph_state", (u, len(reqs), kk, ef_cap, bitmap_tombs))
+                emit(d, i, reqs)
+            for u, allowed, reqs in graph_filtered:
+                h = dev["graphs"][u]
+                d, i = hnsw_search_batch(
+                    dev["vectors"], h["ids"], h["level0"], h["entry"],
+                    jnp.asarray(queries[reqs]), k=k, ef=ef_cap,
+                    metric=self.metric,
+                    allowed=jnp.asarray(compose_mask(allowed)))
+                ops.record_launch(
+                    "graph_state_filt", (u, len(reqs), k, ef_cap))
+                emit(d, i, reqs)
+            return
+
+        # fused path: group (graph, query) pairs by size bucket
+        plain: Dict[Tuple[int, int], Tuple[List[int], List[int]]] = {}
+        filt: Dict[Tuple[int, int], dict] = {}
+
+        def add_filtered(u, mask_key, allowed, reqs):
+            bkey, slot = dev["graph_slot"][u]
+            fr = filt.setdefault(bkey, {"masks": [], "mkey": {},
+                                        "slots": [], "midx": [],
+                                        "reqs": []})
+            mi = fr["mkey"].get(mask_key)
+            if mi is None:
+                mi = len(fr["masks"])
+                fr["mkey"][mask_key] = mi
+                fr["masks"].append(compose_mask(allowed))
+            for r in reqs:
+                fr["slots"].append(slot)
+                fr["midx"].append(mi)
+                fr["reqs"].append(r)
+
+        for u, reqs in graph_shared.items():
+            if bitmap_tombs:
+                add_filtered(u, "tombstones", None, reqs)
+                continue
+            bkey, slot = dev["graph_slot"][u]
+            sl, rq = plain.setdefault(bkey, ([], []))
+            for r in reqs:
+                sl.append(slot)
+                rq.append(r)
+        for u, allowed, reqs in graph_filtered:
+            add_filtered(u, id(allowed), allowed, reqs)
+
+        for bkey, (slots, reqs) in plain.items():
+            b = dev["graph_buckets"][bkey]
+            p = len(reqs)
+            p_pad = ops.bucket(p, 8)
+            gi = np.zeros(p_pad, np.int32)
+            gi[:p] = slots
+            qm = np.zeros((p_pad, d_dim), np.float32)
+            qm[:p] = queries[reqs]
+            d, i = hnsw_search_fused(
+                dev["vectors"], b["ids"], b["level0"], b["entry"],
+                jnp.asarray(gi), jnp.asarray(qm), k=kk, ef=ef_cap,
+                metric=self.metric)
+            ops.record_launch("graph_fused",
+                              (bkey, p_pad, kk, ef_cap, self.metric))
+            self.traffic["query_bytes"] += p_pad * (d_dim * 4 + 4)
+            self.traffic["bytes_to_device"] += p_pad * (d_dim * 4 + 4)
+            emit(d[:p], i[:p], reqs)
+        for bkey, fr in filt.items():
+            b = dev["graph_buckets"][bkey]
+            p = len(fr["reqs"])
+            p_pad = ops.bucket(p, 8)
+            gi = np.zeros(p_pad, np.int32)
+            gi[:p] = fr["slots"]
+            mi_arr = np.zeros(p_pad, np.int32)
+            mi_arr[:p] = fr["midx"]
+            qm = np.zeros((p_pad, d_dim), np.float32)
+            qm[:p] = queries[fr["reqs"]]
+            mn_pad = ops.bucket(len(fr["masks"]), 1)
+            mm = np.zeros((mn_pad, dn), dtype=bool)
+            for j, m in enumerate(fr["masks"]):
+                mm[j] = m
+            d, i = hnsw_search_fused_filtered(
+                dev["vectors"], b["ids"], b["level0"], b["entry"],
+                jnp.asarray(mm), jnp.asarray(mi_arr), jnp.asarray(gi),
+                jnp.asarray(qm), k=k, ef=ef_cap, metric=self.metric)
+            ops.record_launch("graph_fused_filt",
+                              (bkey, p_pad, mn_pad, k, ef_cap, self.metric))
+            self.traffic["mask_bytes"] += mn_pad * dn
+            self.traffic["query_bytes"] += p_pad * (d_dim * 4 + 4)
+            self.traffic["bytes_to_device"] += (mn_pad * dn
+                                                + p_pad * (d_dim * 4 + 4))
+            emit(d[:p], i[:p], fr["reqs"])
 
     # ---- residual verification (strategy c) --------------------------- #
 

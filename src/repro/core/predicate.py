@@ -668,10 +668,23 @@ def _fuse_scan_disjuncts(sources: List[CompiledSource], ctx: _Ctx
     """OR of brute-forced disjuncts: union the covers via one membership
     bitmap so overlapping ids are scanned once, not once per disjunct.
     Raw-only chains join the union (their covers often nest — V_'ab' ⊆
-    V_'a'); graph-backed chains keep their beam searches."""
+    V_'a'); graph-backed chains keep their beam searches.
+
+    On the jax backend raw-only chains are NOT fused: their CSR segment
+    lists are descriptor ranges the device executor resolves against the
+    resident ``base_ids`` with zero candidate-id upload (DESIGN.md §3);
+    materializing the union would trade a possibly-nested re-scan on
+    device for a host bitmap + per-batch id upload.  Each disjunct keeps
+    its own segmented-kernel owner and the executor's merge dedups
+    overlapping ids, so exactness is unchanged (each owner's top-k is
+    exact over its own cover)."""
+    keep_descriptors = ctx.rt.backend == "jax"
+
     def fusable(s: CompiledSource) -> bool:
-        return (s.strategy == "scan"
-                or (s.strategy == "chain" and not s.graph_states))
+        if s.strategy == "scan":
+            return True
+        return (s.strategy == "chain" and not s.graph_states
+                and not keep_descriptors)
     scans = [s for s in sources if fusable(s)]
     if len(scans) < 2:
         return sources

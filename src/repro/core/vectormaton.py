@@ -479,11 +479,16 @@ class VectorMaton:
                     self.state_index[u] = _StateIndex(_HNSW, graph=ng)
 
     def maintenance_stats(self) -> Dict[str, int]:
-        """Write-path accounting: generation / delta / compaction counters
-        plus the growable-buffer copy trace (bench_churn's acceptance
-        signals: builds == compactions, O(log n) reallocations)."""
+        """Write-path accounting (generation / delta / compaction counters
+        plus the growable-buffer copy trace — bench_churn's acceptance
+        signals: builds == compactions, O(log n) reallocations) and the
+        device-execution trace (DESIGN.md §3): kernel launch + retrace
+        counters (``launch_*``) and per-class host→device traffic bytes
+        (``traffic_*``) that the benchmark gate and the retrace-regression
+        test read."""
+        from ..kernels import ops
         rt = self._runtime
-        return {
+        out = {
             "generation": rt.generation if rt is not None else -1,
             "delta_pending": rt.delta.pending if rt is not None else 0,
             "delta_version": rt.delta.version if rt is not None else 0,
@@ -493,6 +498,12 @@ class VectorMaton:
             "vector_bytes_copied": self._vec_store.bytes_copied,
             "deleted": len(self.deleted),
         }
+        for key, val in ops.launch_stats().items():
+            out[f"launch_{key}"] = val
+        if rt is not None:
+            for key, val in rt.traffic.items():
+                out[f"traffic_{key}"] = val
+        return out
 
     def _promote(self, raw_ids: np.ndarray, u: int) -> _StateIndex:
         """Raw -> HNSW promotion once a raw set outgrows 4*T (paper §5): the

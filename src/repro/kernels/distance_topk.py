@@ -13,6 +13,14 @@ streaming reduction:
 Versus materializing the full (Q, N) distance matrix this removes the O(Q·N)
 HBM round-trip — the kernel is compute-bound for d ≥ ~64 instead of
 memory-bound, which is what pushes the §Perf roofline fraction up.
+
+The segmented variant serves many (query, id-set) pairs per launch via
+owner-id masking, and its **descriptor mode** (DESIGN.md §3,
+``distance_topk_descriptors``) additionally resolves the candidate rows
+on device: ``(seg_start, seg_len, owner)`` triples expand against the
+resident CSR ``base_ids`` inside the same executable, so frozen-base
+candidate ids never ship from the host — only the query rows, the
+planning integers, and the post-watermark delta tail do.
 """
 
 from __future__ import annotations
@@ -117,22 +125,11 @@ def _topk_seg_kernel(x_ref, y_ref, qseg_ref, cseg_ref, val_out_ref,
         idx_out_ref[...] = idx_scr[...]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "metric", "block_q",
-                                             "block_n", "interpret",
-                                             "valid_n"))
-def distance_topk_segmented(x: jax.Array, y: jax.Array, qseg: jax.Array,
-                            cseg: jax.Array, k: int, *, metric: str = "l2",
-                            block_q: int = BLOCK_Q, block_n: int = BLOCK_N,
-                            interpret: bool = False,
-                            valid_n: int | None = None):
-    """Segmented exact top-k.  x: (Q, d) queries, y: (N, d) concatenated
-    candidate segments, qseg: (Q, 1) owner id per query row, cseg: (1, N)
-    owner id per candidate row.  A candidate is eligible for a query iff the
-    owner ids match; ineligible pairs never win (distance +inf, index -1).
-
-    Padding convention (ops.py): padded query rows carry qseg -1 and padded
-    candidate rows carry cseg -2, so they never match anything.
-    """
+def _seg_pallas_call(x, y, qseg, cseg, k, *, metric, block_q, block_n,
+                     interpret, valid_n):
+    """Shared pallas_call plumbing for the segmented kernel — used by the
+    host-materialized path (``distance_topk_segmented``) and the
+    descriptor-resolved path (``distance_topk_descriptors``)."""
     q, d = x.shape
     n, d2 = y.shape
     assert d == d2 and q % block_q == 0 and n % block_n == 0
@@ -168,6 +165,143 @@ def distance_topk_segmented(x: jax.Array, y: jax.Array, qseg: jax.Array,
         ],
         interpret=interpret,
     )(x, y, qseg, cseg)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "block_q",
+                                             "block_n", "interpret",
+                                             "valid_n"))
+def distance_topk_segmented(x: jax.Array, y: jax.Array, qseg: jax.Array,
+                            cseg: jax.Array, k: int, *, metric: str = "l2",
+                            block_q: int = BLOCK_Q, block_n: int = BLOCK_N,
+                            interpret: bool = False,
+                            valid_n: int | None = None):
+    """Segmented exact top-k.  x: (Q, d) queries, y: (N, d) concatenated
+    candidate segments, qseg: (Q, 1) owner id per query row, cseg: (1, N)
+    owner id per candidate row.  A candidate is eligible for a query iff the
+    owner ids match; ineligible pairs never win (distance +inf, index -1).
+
+    Padding convention (ops.py): padded query rows carry qseg -1 and padded
+    candidate rows carry cseg -2, so they never match anything.
+    """
+    return _seg_pallas_call(x, y, qseg, cseg, k, metric=metric,
+                            block_q=block_q, block_n=block_n,
+                            interpret=interpret, valid_n=valid_n)
+
+
+# --------------------------------------------------------------------- #
+# descriptor mode: candidates resolved against the device-resident CSR
+# --------------------------------------------------------------------- #
+
+def expand_descriptors(base_ids: jax.Array, starts: jax.Array,
+                       lens: jax.Array, owners: jax.Array, n_desc: int):
+    """Expand ``(seg_start, seg_len, owner)`` descriptor triples into a
+    flat candidate-id + owner-id pair of length ``n_desc`` — entirely on
+    device, against the resident CSR ``base_ids``.
+
+    Descriptor d occupies flat slots [Σ lens[:d], Σ lens[:d+1]); slot i of
+    descriptor d resolves to ``base_ids[starts[d] + i]`` with owner
+    ``owners[d]``.  Slots past Σ lens (descriptor-region padding) get the
+    unmatchable owner -3 and candidate position 0, so they can never win a
+    segment's top-k.  Host→device traffic is the three (D,) int32 arrays —
+    the candidate ids themselves never leave the device.
+    """
+    cum = jnp.cumsum(lens)                                   # (D,)
+    slot = jnp.arange(n_desc, dtype=jnp.int32)
+    d = jnp.searchsorted(cum, slot, side="right").astype(jnp.int32)
+    dc = jnp.minimum(d, lens.shape[0] - 1)
+    within = slot - (cum[dc] - lens[dc])
+    valid = slot < cum[lens.shape[0] - 1]
+    pos = jnp.where(valid, starts[dc] + within, 0)
+    nb = max(int(base_ids.shape[0]), 1)
+    cand = base_ids[jnp.clip(pos, 0, nb - 1)].astype(jnp.int32)
+    own = jnp.where(valid, owners[dc], -3)
+    return cand, own
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_desc", "metric",
+                                             "block_q", "block_n",
+                                             "interpret"))
+def distance_topk_descriptors(vectors: jax.Array, base_ids: jax.Array,
+                              deleted: jax.Array, x: jax.Array,
+                              qseg: jax.Array, starts: jax.Array,
+                              lens: jax.Array, owners: jax.Array,
+                              tail_res_ids: jax.Array,
+                              tail_res_owners: jax.Array,
+                              tail_ship_ids: jax.Array,
+                              tail_ship_owners: jax.Array,
+                              tail_ship_rows: jax.Array, k: int, *,
+                              n_desc: int, metric: str = "l2",
+                              block_q: int = BLOCK_Q,
+                              block_n: int = BLOCK_N,
+                              interpret: bool = False):
+    """Segmented top-k whose candidate sets are *descriptors* into the
+    device-resident CSR, not host-materialized id lists.
+
+    Flat candidate layout (all regions 0 or a multiple of ``block_n``):
+
+      [ descriptor region (n_desc) | resident tail | shipped tail ]
+
+    * descriptor region — ``(starts, lens, owners)`` triples expanded
+      against ``base_ids`` (frozen chain covers / scan unions);
+    * resident tail — explicit candidate ids below the upload watermark
+      (masked conjunction scans, pre-watermark delta); rows gathered from
+      the resident ``vectors`` table;
+    * shipped tail — ids at/past the watermark whose rows
+      (``tail_ship_rows``) ship from the host per batch (post-freeze
+      delta inserts, bounded by the compaction threshold).
+
+    ``deleted`` is the resident tombstone mask: resident candidates that
+    are tombstoned get the unmatchable owner -3 in-kernel; shipped-tail
+    tombstones must be filtered host-side by the caller.
+
+    Returns ``(vals, gids)`` of shape (Q, k): distances ascending and
+    GLOBAL candidate ids (-1/+inf padding) — no flat-position indices
+    escape, so callers never map back through a host candidate array.
+    """
+    y, cseg, gid_flat = assemble_flat_candidates(
+        vectors, base_ids, deleted, starts, lens, owners, tail_res_ids,
+        tail_res_owners, tail_ship_ids, tail_ship_owners, tail_ship_rows,
+        n_desc)
+    n = int(y.shape[0])
+    vals, idx = _seg_pallas_call(
+        x, y, qseg, cseg.reshape(1, n), k, metric=metric, block_q=block_q,
+        block_n=block_n, interpret=interpret, valid_n=n)
+    gids = jnp.where(idx >= 0, gid_flat[jnp.clip(idx, 0, n - 1)], -1)
+    return vals, gids
+
+
+def assemble_flat_candidates(vectors, base_ids, deleted, starts, lens,
+                             owners, tail_res_ids, tail_res_owners,
+                             tail_ship_ids, tail_ship_owners,
+                             tail_ship_rows, n_desc: int):
+    """Device-side assembly of the flat candidate layout shared by the
+    fp32 descriptor kernel and the SQ8 segmented path: returns
+    ``(y (N, d) rows, cseg (N,) owners, gid_flat (N,) global ids)`` with
+    tombstoned resident candidates reassigned to the unmatchable owner
+    -3.  Traced inside the callers' jits, so XLA fuses the expansion and
+    gathers with the downstream kernel."""
+    if n_desc:
+        dcand, down = expand_descriptors(base_ids, starts, lens, owners,
+                                         n_desc)
+    else:
+        dcand = jnp.empty((0,), jnp.int32)
+        down = jnp.empty((0,), jnp.int32)
+    cand_res = jnp.concatenate([dcand, tail_res_ids.astype(jnp.int32)])
+    own_res = jnp.concatenate([down, tail_res_owners.astype(jnp.int32)])
+    dn = int(deleted.shape[0])
+    if dn and cand_res.shape[0]:
+        dead = deleted[jnp.clip(cand_res, 0, dn - 1)]
+        own_res = jnp.where(dead, -3, own_res)
+    y_parts = []
+    if cand_res.shape[0]:
+        y_parts.append(vectors[cand_res])
+    if tail_ship_rows.shape[0]:
+        y_parts.append(tail_ship_rows)
+    y = (jnp.concatenate(y_parts, axis=0) if len(y_parts) > 1
+         else y_parts[0])
+    cseg = jnp.concatenate([own_res, tail_ship_owners.astype(jnp.int32)])
+    gid_flat = jnp.concatenate([cand_res, tail_ship_ids.astype(jnp.int32)])
+    return y, cseg, gid_flat
 
 
 @functools.partial(jax.jit, static_argnames=("k", "metric", "block_q",

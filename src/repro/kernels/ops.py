@@ -1,8 +1,20 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public jit'd wrappers around the Pallas kernels (DESIGN.md §2–§3).
 
 Responsibilities:
   * pad ragged (Q, N, k) to hardware-aligned tile multiples and strip the
     padding from results (padded base rows get +inf distance / -1 index);
+  * **shape-bucket** every dynamic dimension (query rows, candidate rows,
+    descriptor counts) to power-of-two buckets so steady-state serving
+    hits a fixed set of compiled executables instead of retracing XLA on
+    every novel batch shape (DESIGN.md §3 "launch cache");
+  * drive the **descriptor-resolved** segmented kernel
+    (``topk_segmented_desc``): candidate sets arrive as ``(seg_start,
+    seg_len, owner)`` triples against the device-resident CSR, so frozen
+    chain covers and scan unions ship zero candidate-id bytes per batch —
+    only post-watermark delta tails cross the host↔device boundary;
+  * account every launch and (re)trace in module-level counters
+    (``launch_stats``) that ``VectorMaton.maintenance_stats`` and the
+    benchmark gate read;
   * select interpret mode automatically off-TPU (this container is CPU-only;
     interpret=True executes the kernel body in Python for validation);
   * expose a NumPy fast path used by the CPU benchmark harness so the paper's
@@ -13,17 +25,85 @@ Responsibilities:
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import ref
-from .distance_topk import distance_topk, distance_topk_segmented
+from .distance_topk import (distance_topk, distance_topk_descriptors,
+                            distance_topk_segmented)
 from .pairwise import pairwise_distance
 
 _LANE = 128
+
+
+# --------------------------------------------------------------------- #
+# launch cache: power-of-two shape buckets + launch/retrace accounting
+# --------------------------------------------------------------------- #
+
+def bucket(n: int, floor: int = _LANE) -> int:
+    """Smallest power-of-two multiple of ``floor`` holding ``n`` rows (0
+    stays 0).  Every dynamic dimension the executor feeds a kernel goes
+    through this, so a steady-state batch sweep compiles O(log) distinct
+    executables per dimension instead of one per novel shape."""
+    if n <= 0:
+        return 0
+    b = max(int(floor), 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+_launch_counters: Dict[str, int] = {}
+_launch_keys: set = set()
+
+
+def record_launch(kind: str, key: Tuple) -> None:
+    """Count one kernel launch of ``kind``; a (kind, key) pair not seen
+    since the last reset is a (re)trace — a new executable compiled."""
+    _launch_counters[kind] = _launch_counters.get(kind, 0) + 1
+    _launch_counters["launches"] = _launch_counters.get("launches", 0) + 1
+    if (kind, key) not in _launch_keys:
+        _launch_keys.add((kind, key))
+        _launch_counters["retraces"] = (
+            _launch_counters.get("retraces", 0) + 1)
+
+
+def launch_stats() -> Dict[str, int]:
+    """Launch/retrace counters since the last reset.  ``executables`` is
+    the number of distinct (kind, shape-bucket) keys seen — the bound the
+    retrace-regression test asserts against."""
+    out = dict(_launch_counters)
+    out.setdefault("launches", 0)
+    out.setdefault("retraces", 0)
+    out["executables"] = len(_launch_keys)
+    return out
+
+
+def reset_launch_stats() -> None:
+    _launch_counters.clear()
+    _launch_keys.clear()
+
+
+def jit_cache_sizes() -> Dict[str, int]:
+    """Tracing-cache sizes of the jit'd kernel entry points — the ground
+    truth the bucket counters approximate (tests compare both)."""
+    from ..core import hnsw_jax
+    out = {}
+    for name, fn in [
+            ("distance_topk_segmented", distance_topk_segmented),
+            ("distance_topk_descriptors", distance_topk_descriptors),
+            ("hnsw_search_fused", hnsw_jax.hnsw_search_fused),
+            ("hnsw_search_fused_filtered",
+             hnsw_jax.hnsw_search_fused_filtered),
+    ]:
+        try:
+            out[name] = int(fn._cache_size())
+        except AttributeError:  # pragma: no cover - older jax
+            out[name] = -1
+    return out
 
 
 def _on_tpu() -> bool:
@@ -116,6 +196,93 @@ def topk_segmented(x: jax.Array, y: jax.Array, qseg: jax.Array,
     return vals, idx
 
 
+def topk_segmented_desc(vectors: jax.Array, base_ids: jax.Array,
+                        deleted: jax.Array, x: np.ndarray,
+                        qseg: np.ndarray, desc_starts: np.ndarray,
+                        desc_lens: np.ndarray, desc_owners: np.ndarray,
+                        tail_res_ids: np.ndarray,
+                        tail_res_owners: np.ndarray,
+                        tail_ship_ids: np.ndarray,
+                        tail_ship_rows: np.ndarray,
+                        tail_ship_owners: np.ndarray, k: int, *,
+                        metric: str = "l2",
+                        interpret: bool | None = None
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Descriptor-driven segmented top-k: ONE launch serving many
+    (query, id-set) pairs whose frozen-base candidates are ``(seg_start,
+    seg_len, owner)`` triples resolved against the device-resident CSR.
+
+    Host→device traffic is the query matrix plus planning integers (the
+    descriptor triples, owner ids, and tail id lists); candidate rows for
+    the descriptor region and the resident tail are gathered on device.
+    Only ``tail_ship_rows`` — delta inserts past the upload watermark —
+    ship vector rows, and the caller must pre-filter their tombstones.
+
+    Every dynamic dimension is padded to a power-of-two bucket (``bucket``)
+    so repeated batches of similar size reuse one compiled executable.
+    Returns DEVICE arrays ``(vals, gids)`` of shape (Q, k): ascending
+    distances + global candidate ids, (+inf, -1) padding.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    q = x.shape[0]
+    kp = _round_up(k, 8)
+    if kp > _LANE:
+        raise ValueError(f"k={k} exceeds kernel max {_LANE}")
+    args, key = pad_descriptor_batch(
+        x, qseg, desc_starts, desc_lens, desc_owners, tail_res_ids,
+        tail_res_owners, tail_ship_ids, tail_ship_rows, tail_ship_owners)
+    n_desc = key[1]
+    vals, gids = distance_topk_descriptors(
+        vectors, base_ids, deleted, *args, kp, n_desc=n_desc,
+        metric=metric, interpret=interpret)
+    record_launch("desc_scan", key + (kp, metric))
+    vals, gids = vals[:q, :k], gids[:q, :k]
+    bad = (gids < 0) | ~jnp.isfinite(vals)
+    return jnp.where(bad, jnp.inf, vals), jnp.where(bad, -1, gids)
+
+
+def pad_descriptor_batch(x, qseg, desc_starts, desc_lens, desc_owners,
+                         tail_res_ids, tail_res_owners, tail_ship_ids,
+                         tail_ship_rows, tail_ship_owners):
+    """Bucket-pad the host-side inputs of a descriptor launch (shared by
+    the fp32 and SQ8 wrappers).  Returns the device-ready positional args
+    ``(x, qseg, starts, lens, owners, tail_res_ids, tail_res_owners,
+    tail_ship_ids, tail_ship_owners, tail_ship_rows)`` and the shape
+    bucket key ``(qp, n_desc, tr, ts, dp, d)``."""
+    q, d = x.shape
+    qp = bucket(q)
+    xp = np.zeros((qp, d), np.float32)
+    xp[:q] = x
+    qsp = np.full((qp, 1), -1, np.int32)
+    qsp[:q, 0] = qseg
+    nd_real = int(desc_lens.sum()) if len(desc_lens) else 0
+    n_desc = bucket(nd_real)
+    dp = bucket(len(desc_starts), 8) if n_desc else 0
+
+    def _pad1(a, n, fill):
+        out = np.full(n, fill, np.int32)
+        out[:len(a)] = a
+        return out
+
+    tr = bucket(len(tail_res_ids))
+    ts = bucket(len(tail_ship_ids))
+    if n_desc + tr + ts == 0:
+        raise ValueError("descriptor launch with no candidates")
+    rows = np.zeros((ts, d), np.float32)
+    rows[:len(tail_ship_rows)] = tail_ship_rows
+    args = (jnp.asarray(xp), jnp.asarray(qsp),
+            jnp.asarray(_pad1(desc_starts, dp, 0)),
+            jnp.asarray(_pad1(desc_lens, dp, 0)),
+            jnp.asarray(_pad1(desc_owners, dp, -3)),
+            jnp.asarray(_pad1(tail_res_ids, tr, 0)),
+            jnp.asarray(_pad1(tail_res_owners, tr, -3)),
+            jnp.asarray(_pad1(tail_ship_ids, ts, 0)),
+            jnp.asarray(_pad1(tail_ship_owners, ts, -3)),
+            jnp.asarray(rows))
+    return args, (qp, n_desc, tr, ts, dp, d)
+
+
 # --------------------------------------------------------------------- #
 # NumPy fast path (host benchmarks; bit-compatible with ref.py in f32)
 # --------------------------------------------------------------------- #
@@ -169,5 +336,62 @@ def topk_segmented_numpy(x: np.ndarray, y: np.ndarray, qseg: np.ndarray,
     return vals, idx
 
 
+# --------------------------------------------------------------------- #
+# device-side merge: segmented dedup + top-k fold over launch outputs
+# --------------------------------------------------------------------- #
+
+_ID_SENTINEL = np.int32(2 ** 31 - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_topk_device(big_d: jax.Array, big_i: jax.Array, sel: jax.Array,
+                      deleted: jax.Array, k: int
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Per-request merge of kernel/beam launch outputs, entirely on device.
+
+    ``big_d``/``big_i``: (T, W) stacked launch output rows (distances +
+    global ids, (-1, +inf) padding); ``sel``: (R, S) row indices into the
+    stack — request r's candidate pool is rows ``sel[r]`` flattened, in
+    the same order the host merge would concatenate them (so tie-breaks
+    are bit-identical); out-of-pool slots point at an all-padding row.
+    ``deleted`` is the resident tombstone mask (ids past it must be
+    pre-filtered by the caller, as in the scan path).
+
+    Per request: drop tombstones, stable-sort by distance, keep the first
+    (closest) occurrence per id — OR disjuncts and graph/scan overlap can
+    duplicate ids — and cut to k.  Matches the NumPy host merge
+    bit-for-bit; ``tests/test_device_exec.py`` asserts it on the churn
+    oracle workload.
+    """
+    r_n, s_n = sel.shape
+    d = big_d[sel].reshape(r_n, -1)
+    i = big_i[sel].reshape(r_n, -1)
+    dn = int(deleted.shape[0])
+    dead = (i >= 0) & (i < dn) & deleted[jnp.clip(i, 0, max(dn - 1, 0))]
+    bad = (i < 0) | dead | ~jnp.isfinite(d)
+    d = jnp.where(bad, jnp.inf, d)
+    iu = jnp.where(bad, _ID_SENTINEL, i)
+
+    def one(drow, irow):
+        p1 = jnp.argsort(drow, stable=True)
+        ds, is_ = drow[p1], irow[p1]
+        p2 = jnp.argsort(is_, stable=True)        # ids grouped, d-order ties
+        idg = is_[p2]
+        first = jnp.concatenate(
+            [jnp.ones((1,), bool), idg[1:] != idg[:-1]])
+        first = first & (idg != _ID_SENTINEL)
+        keep = jnp.zeros_like(first).at[p2].set(first)   # back to d-order
+        rank = jnp.cumsum(keep) - 1
+        slot = jnp.where(keep & (rank < k), rank, k)
+        out_d = jnp.full((k + 1,), jnp.inf, jnp.float32).at[slot].set(ds)
+        out_i = jnp.full((k + 1,), -1, jnp.int32).at[slot].set(
+            jnp.where(is_ == _ID_SENTINEL, -1, is_))
+        return out_d[:k], out_i[:k]
+
+    return jax.vmap(one)(d, iu)
+
+
 __all__ = ["pairwise_sqdist", "topk", "topk_segmented",
-           "topk_segmented_numpy", "topk_numpy", "ref"]
+           "topk_segmented_desc", "topk_segmented_numpy", "topk_numpy",
+           "merge_topk_device", "bucket", "launch_stats",
+           "reset_launch_stats", "record_launch", "jit_cache_sizes", "ref"]

@@ -116,6 +116,162 @@ def quantized_topk(xq, sx, x2, yq, sy, y2, k: int, *,
     )(xq, sx, x2, yq, sy, y2)
 
 
+def _qtopk_seg_kernel(xq_ref, sx_ref, x2_ref, yq_ref, sy_ref, y2_ref,
+                      qseg_ref, cseg_ref, val_out_ref, idx_out_ref,
+                      val_scr, idx_scr, *, k: int, block_n: int,
+                      n_blocks: int, valid_n: int):
+    """Segmented variant of the SQ8 scan: row r may only take candidates c
+    with cseg[c] == qseg[r] — one quantized launch serving every
+    (query, id-set) pair in the batch, mirroring ``_topk_seg_kernel``."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        val_scr[...] = jnp.full_like(val_scr, jnp.inf)
+        idx_scr[...] = jnp.full_like(idx_scr, -1)
+
+    xq = xq_ref[...]                                  # (bq, d) int8
+    yq = yq_ref[...]                                  # (bn, d) int8
+    dot = jax.lax.dot_general(
+        xq, yq, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32).astype(f32)  # (bq, bn)
+    cross = dot * sx_ref[...] * sy_ref[...].reshape(1, -1)
+    dist = x2_ref[...] + y2_ref[...].reshape(1, -1) - 2.0 * cross
+    dist = jnp.maximum(dist, 0.0)
+
+    base = j * block_n
+    col = base + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
+    match = qseg_ref[...] == cseg_ref[...]            # (bq, bn) membership
+    if valid_n < n_blocks * block_n:
+        match = match & (col < valid_n)
+    dist = jnp.where(match, dist, jnp.inf)
+
+    all_vals = jnp.concatenate([val_scr[...], dist], axis=1)
+    all_idx = jnp.concatenate(
+        [idx_scr[...], jnp.where(match, col, -1)], axis=1)
+    neg_top, pos = jax.lax.top_k(-all_vals, k)
+    val_scr[...] = -neg_top
+    idx_scr[...] = jnp.take_along_axis(all_idx, pos, axis=1)
+
+    @pl.when(j == n_blocks - 1)
+    def _emit():
+        val_out_ref[...] = val_scr[...]
+        idx_out_ref[...] = idx_scr[...]
+
+
+def _quantized_topk_segmented(xq, sx, x2, yq, sy, y2, qseg, cseg, k: int, *,
+                              block_q: int = BLOCK_Q,
+                              block_n: int = BLOCK_N,
+                              interpret: bool = False,
+                              valid_n: int | None = None):
+    """Segmented SQ8 scan (traced inside ``topk_sq8_segmented_desc``).
+    qseg: (Q, 1) owner per query row, cseg: (1, N) owner per candidate."""
+    q, d = xq.shape
+    n = yq.shape[0]
+    assert q % block_q == 0 and n % block_n == 0 and k <= block_n
+    if valid_n is None:
+        valid_n = n
+    n_blocks = n // block_n
+    kernel = functools.partial(_qtopk_seg_kernel, k=k, block_n=block_n,
+                               n_blocks=n_blocks, valid_n=valid_n)
+    return pl.pallas_call(
+        kernel,
+        grid=(q // block_q, n_blocks),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), f32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), f32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xq, sx, x2, yq, sy, y2, qseg, cseg)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "kq", "n_desc",
+                                             "interpret"))
+def _sq8_topk_descriptors(vectors, base_ids, deleted, x, qseg, starts,
+                          lens, owners, tail_res_ids, tail_res_owners,
+                          tail_ship_ids, tail_ship_owners, tail_ship_rows,
+                          k: int, kq: int, *, n_desc: int,
+                          interpret: bool = False):
+    """Descriptor-resolved SQ8 scan + fp32 rerank: the quantized analogue
+    of ``distance_topk_descriptors`` — assembly, quantization, the int8
+    segmented kernel, and the exact rerank all fuse into one executable,
+    so the SQ8 path ships the same planning integers as the fp32 path."""
+    from .distance_topk import assemble_flat_candidates
+    y, cseg, gid_flat = assemble_flat_candidates(
+        vectors, base_ids, deleted, starts, lens, owners, tail_res_ids,
+        tail_res_owners, tail_ship_ids, tail_ship_owners, tail_ship_rows,
+        n_desc)
+    n = int(y.shape[0])
+    xq, sx, x2 = quantize_sq8(x)
+    yq, sy, y2 = quantize_sq8(y)
+    vals_q, idx = _quantized_topk_segmented(
+        xq, sx, x2, yq, sy, y2, qseg, cseg.reshape(1, n), kq,
+        interpret=interpret, valid_n=n)
+    # exact fp32 rerank of the quantized candidates, per query row
+    cand = y[jnp.clip(idx, 0, n - 1)]                 # (Q, kq, d)
+    diff = cand - x[:, None, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    d2 = jnp.where(idx >= 0, d2, jnp.inf)
+    neg, pos = jax.lax.top_k(-d2, k)
+    fidx = jnp.take_along_axis(idx, pos, axis=1)
+    gids = jnp.where(fidx >= 0, gid_flat[jnp.clip(fidx, 0, n - 1)], -1)
+    vals = jnp.where(fidx >= 0, -neg, jnp.inf)
+    return vals, gids
+
+
+def topk_sq8_segmented_desc(vectors, base_ids, deleted, x, qseg,
+                            desc_starts, desc_lens, desc_owners,
+                            tail_res_ids, tail_res_owners, tail_ship_ids,
+                            tail_ship_rows, tail_ship_owners, k: int, *,
+                            overfetch: int = 4,
+                            interpret: bool | None = None):
+    """Batched SQ8 executor path: ONE segmented quantized launch for every
+    scan item in the batch (the per-item ``topk_sq8_rerank`` loop this
+    replaces paid a launch + a host→device candidate upload per item).
+    Same descriptor/tail contract and shape bucketing as
+    ``ops.topk_segmented_desc``; ``k·overfetch`` beyond the 128-lane
+    scratch budget raises like the unsegmented wrapper."""
+    from .ops import _on_tpu, _round_up, pad_descriptor_batch, record_launch
+    if interpret is None:
+        interpret = not _on_tpu()
+    q = x.shape[0]
+    kq = max(k * overfetch, k)
+    if kq > 128:
+        raise ValueError(
+            f"k*overfetch={kq} exceeds the quantized kernel's 128-lane "
+            f"scratch budget (k={k}, overfetch={overfetch}); lower k or "
+            f"overfetch (the executor clamps overfetch to 128//k)")
+    args, key = pad_descriptor_batch(
+        x, qseg, desc_starts, desc_lens, desc_owners, tail_res_ids,
+        tail_res_owners, tail_ship_ids, tail_ship_rows, tail_ship_owners)
+    kqp = min(_round_up(kq, 8), 128)
+    vals, gids = _sq8_topk_descriptors(
+        vectors, base_ids, deleted, *args, k, kqp, n_desc=key[1],
+        interpret=interpret)
+    record_launch("sq8_scan", key + (k, kqp))
+    vals, gids = vals[:q], gids[:q]
+    bad = (gids < 0) | ~jnp.isfinite(vals)
+    return jnp.where(bad, jnp.inf, vals), jnp.where(bad, -1, gids)
+
+
 # --------------------------------------------------------------------- #
 # public wrapper: quantized scan + fp32 rerank
 # --------------------------------------------------------------------- #

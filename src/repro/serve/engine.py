@@ -8,10 +8,14 @@ Request flow (DESIGN.md §3):
   embed (batched, jit'd mean-pool over LM hidden states)
     -> planner: predicate compile + automaton walks per request (µs-scale
        host work), identical predicates coalesced into one plan entry
-    -> batched executor: ONE segmented fused distance+top-k launch for all
-       brute-forced candidate sets in the batch + one vmapped beam search
-       per shared graph (bitmap-filtered for conjunctions) + residual
-       verification loops for multi-segment LIKE.
+    -> device-resident executor: ONE descriptor-driven segmented
+       distance+top-k launch for all brute-forced candidate sets (frozen
+       covers resolve against the resident CSR — the host ships planning
+       integers, not candidate ids) + ONE fused beam launch per graph
+       size bucket + a device-side merge; residual verification loops for
+       multi-segment LIKE stay on host.  ``maintenance_stats`` exposes
+       the launch/retrace counters and per-class host→device traffic the
+       serving tier watches (bench_device_exec gates on them).
 
 Requests accept predicate strings — ``"ab AND NOT (cd OR LIKE 'a%b_')"``
 — as well as plain CONTAINS patterns (parsed in core/predicate.py).
