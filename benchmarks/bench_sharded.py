@@ -1,0 +1,186 @@
+"""Sharded plan-execution trajectory (DESIGN.md §5) — PR 5.
+
+Measures the distributed serving hot path on an 8-shard host mesh: QPS
+and p50/p99 wave latency, per-wave ``shard_map`` launch counts, and the
+per-class host→device traffic of the sharded executor — the dense
+per-entry mask upload this PR removed is visible as
+``shard_mask_bytes_per_wave == 0`` (descriptor + query traffic only; the
+per-predicate resident tails upload once into the spec cache during
+warm-up and are absent from steady-state waves).
+
+Writes the repo-root ``BENCH_PR5.json`` trajectory file.  With
+``--baseline <path>`` (what ``scripts/ci.sh`` runs) the PREVIOUS file is
+loaded first and the run FAILS if per-wave launch counts or mask bytes
+regress against it — the benchmark is the gate, exactly like PR 4's
+launch-economy check.
+
+    PYTHONPATH=src python -m benchmarks.bench_sharded --smoke \
+        --baseline BENCH_PR5.json
+"""
+
+from __future__ import annotations
+
+import os
+
+# must land before jax initializes: the sharded path needs a real mesh
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+import sys
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core.vectormaton import VectorMaton, VectorMatonConfig
+from repro.kernels import ops
+
+from .common import emit, save_json
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+TRAJECTORY = os.path.join(REPO_ROOT, "BENCH_PR5.json")
+
+PREDS = ["a", "ab", "abc", "ba", "cd", "a OR cd", "NOT ab", "dc"]
+
+
+def _corpus(n: int, dim: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    seqs = ["".join(rng.choice(list("abcd"), size=rng.integers(5, 15)))
+            for _ in range(n)]
+    vecs = rng.standard_normal((n, dim)).astype(np.float32)
+    return vecs, seqs
+
+
+def run(n: int = 1001, dim: int = 32, n_requests: int = 32,
+        waves: int = 10, k: int = 10, seed: int = 0) -> dict:
+    from repro.distributed.sharded_search import sharded_plan_topk
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(data=8, model=1)
+    # n deliberately NOT a multiple of 8: the residency pads internally
+    vecs, seqs = _corpus(n, dim, seed)
+    vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=10 ** 9))
+    rng = np.random.default_rng(seed + 1)
+
+    def batch(size: int, shift: int):
+        preds = [PREDS[(shift + j) % len(PREDS)] for j in range(size)]
+        q = rng.standard_normal((size, dim)).astype(np.float32)
+        return q, preds
+
+    def wave(size: int, shift: int):
+        q, preds = batch(size, shift)
+        rt = vm.snapshot()
+        plan = vm.plan(preds, rt)
+        return sharded_plan_topk(mesh, None, rt, q, plan, k)
+
+    # ---- warm-up: build the residency, fill the spec + launch caches
+    ops.reset_launch_stats()
+    for size in range(1, 9):
+        wave(max(1, (size * n_requests) // 8), size)
+    warm = ops.launch_stats()
+    t0 = dict(vm.runtime.traffic)
+
+    # ---- steady state: fixed-size waves, cached predicates
+    lat: List[float] = []
+    served = 0
+    for b in range(waves):
+        t = time.perf_counter()
+        wave(n_requests, b)
+        lat.append(time.perf_counter() - t)
+        served += n_requests
+    steady = ops.launch_stats()
+    t1 = vm.runtime.traffic
+    lat_ms = np.asarray(lat) * 1e3
+
+    def per_wave(key: str) -> float:
+        return (t1[key] - t0[key]) / waves
+
+    out = {
+        "config": {"n": n, "dim": dim, "n_requests": n_requests,
+                   "waves": waves, "k": k, "shards": 8},
+        "qps": served / float(np.sum(lat)),
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "launches_per_wave": (steady.get("sharded_sweep", 0)
+                              - warm.get("sharded_sweep", 0)) / waves,
+        "shard_mask_bytes_per_wave": per_wave("shard_mask_bytes"),
+        "shard_descriptor_bytes_per_wave":
+            per_wave("shard_descriptor_bytes"),
+        "shard_tail_bytes_per_wave": per_wave("shard_tail_bytes"),
+        "shard_query_bytes_per_wave": per_wave("shard_query_bytes"),
+        "executables": steady["executables"],
+    }
+    emit("sharded/qps", 1e6 / out["qps"],
+         f"p50={out['p50_ms']:.1f}ms;p99={out['p99_ms']:.1f}ms")
+    emit("sharded/launches_per_wave", out["launches_per_wave"] * 1e3,
+         f"executables={out['executables']}")
+    emit("sharded/mask_bytes_per_wave", out["shard_mask_bytes_per_wave"],
+         f"descriptor={out['shard_descriptor_bytes_per_wave']:.0f};"
+         f"tail={out['shard_tail_bytes_per_wave']:.0f}")
+    return out
+
+
+GATED = ["launches_per_wave", "shard_mask_bytes_per_wave",
+         "shard_tail_bytes_per_wave", "executables"]
+
+
+def check_baseline(out: dict, path: str) -> List[str]:
+    """The recorded trajectory is the regression gate: the deterministic
+    launch-economy metrics must not grow."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        base = json.load(f)
+    if base.get("config") != out.get("config"):
+        print("# baseline config differs; sharded gate skipped",
+              file=sys.stderr)
+        return []
+    errs = []
+    for key in GATED:
+        if key in base and out[key] > base[key]:
+            errs.append(f"{key} regressed: {base[key]} -> {out[key]}")
+    return errs
+
+
+def main(smoke: bool = False, baseline: str | None = None) -> dict:
+    if smoke:
+        out = run(n=301, dim=16, n_requests=16, waves=6, k=8)
+    else:
+        out = run()
+    errs = check_baseline(out, baseline) if baseline else []
+    if out["shard_mask_bytes_per_wave"] != 0:
+        errs.append("warm sharded waves shipped dense per-entry masks: "
+                    f"{out['shard_mask_bytes_per_wave']} B/wave")
+    if out["shard_tail_bytes_per_wave"] != 0:
+        errs.append("warm sharded waves re-uploaded cached predicate "
+                    f"tails: {out['shard_tail_bytes_per_wave']} B/wave")
+    if out["launches_per_wave"] != 1.0:
+        errs.append("steady-state wave took more than one shard_map "
+                    f"sweep: {out['launches_per_wave']}")
+    save_json("sharded", out)
+    if errs:
+        # keep the committed baseline intact so the gate keeps firing
+        # until the regression is actually fixed
+        for e in errs:
+            print(f"# SHARDED GATE FAILED: {e}", file=sys.stderr)
+        sys.exit(1)
+    if smoke:
+        # only the smoke config refreshes the committed trajectory: a
+        # full-config run would config-mismatch the CI gate and silently
+        # disable the non-regression comparison
+        with open(TRAJECTORY, "w") as f:
+            json.dump(out, f, indent=1)
+            f.write("\n")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--baseline", default=None,
+                    help="previous BENCH_PR5.json to gate sharded "
+                         "launch-economy counts against")
+    args = ap.parse_args()
+    main(smoke=args.smoke, baseline=args.baseline)

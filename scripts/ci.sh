@@ -49,6 +49,12 @@ python -m benchmarks.bench_qps_recall --smoke --profile
 # against the committed baseline (the file is then refreshed in place)
 python -m benchmarks.bench_device_exec --smoke --baseline BENCH_PR4.json
 
+# sharded launch-economy gate (DESIGN.md §5): warm sharded waves must
+# ship ZERO dense per-entry mask bytes (descriptor + query traffic only,
+# cached predicate tails not re-uploaded) and run ONE shard_map sweep per
+# wave; regressions against the committed BENCH_PR5.json trajectory FAIL
+python -m benchmarks.bench_sharded --smoke --baseline BENCH_PR5.json
+
 # churn smoke (write path, DESIGN.md §4): records insert throughput and
 # QPS under a 10% write mix, and asserts that full runtime rebuilds
 # during churn equal the number of compactions — never the insert count —

@@ -171,11 +171,17 @@ class DeltaRuntime:
 
 @dataclass
 class ChainCover:
-    """A state's inheritance-chain cover in CSR coordinates (== V_state)."""
+    """A state's inheritance-chain cover in CSR coordinates (== V_state).
+
+    ``states`` is aligned with ``segments``: the chain state that owns each
+    segment.  The sharded executor resolves covers against a *shard-local*
+    CSR, whose per-state pointers are keyed by state id — the global
+    ``(lo, hi)`` ranges are meaningless there, so the states ride along."""
     segments: List[Tuple[int, int]]
     raw_segments: List[Tuple[int, int]]
     graph_states: List[int]
     size: int
+    states: List[int] = field(default_factory=list)
 
 
 @dataclass
@@ -252,11 +258,20 @@ class PackedRuntime:
         self.use_descriptors = True     # CSR descriptors vs host id upload
         self.fuse_graphs = True         # bucket-fused vs per-state beams
         self.device_merge = True        # device vs host per-request merge
+        self.shard_descriptors = True   # sharded CSR descriptors vs the
+                                        # legacy per-entry dense-mask path
+        # (mesh, axis, watermark) -> ShardedDeviceIndex (DESIGN.md §5);
+        # _shard_auto records the watermark frozen by the first n=None use
+        # per (mesh, axis), so auto and explicit callers share a residency
+        self._shard_dev: Dict = {}
+        self._shard_auto: Dict = {}
         # host→device traffic accounting, per batch class (bench gate)
         self.traffic: Dict[str, int] = {
             "batches": 0, "bytes_to_device": 0, "candidate_id_bytes": 0,
             "query_bytes": 0, "descriptor_bytes": 0, "row_bytes": 0,
-            "mask_bytes": 0}
+            "mask_bytes": 0, "shard_batches": 0, "shard_mask_bytes": 0,
+            "shard_descriptor_bytes": 0, "shard_tail_bytes": 0,
+            "shard_query_bytes": 0}
 
     # ------------------------------------------------------------------ #
     # construction
@@ -367,11 +382,41 @@ class PackedRuntime:
             }
         return self._dev
 
+    _SHARD_DEV_MAX = 4
+
+    def to_device_sharded(self, mesh, axis: str = "data",
+                          n: Optional[int] = None):
+        """Row-sharded device residency over ``mesh`` (DESIGN.md §5):
+        vector table, tombstone bitmap, and the shard-local CSR, uploaded
+        once per (mesh, axis, watermark) and reused by every later
+        sharded batch.  ``n`` pins the shard watermark (rows past it are
+        host-merged delta overflow); ``None`` freezes the current table
+        length on first use.  The cache is a small LRU: each residency
+        pins a full padded device copy of the table, so a caller that
+        keeps moving the watermark recycles slots instead of accumulating
+        table copies until the next compaction."""
+        from ..distributed.sharded_search import ShardedDeviceIndex
+        if n is None:
+            n = self._shard_auto.get((mesh, axis))
+            if n is None:
+                n = len(self.vectors)
+                self._shard_auto[(mesh, axis)] = n
+        key = (mesh, axis, int(n))
+        sh = self._shard_dev.pop(key, None)
+        if sh is None:
+            while len(self._shard_dev) >= self._SHARD_DEV_MAX:
+                self._shard_dev.pop(next(iter(self._shard_dev)))
+            sh = ShardedDeviceIndex(self, mesh, axis=axis, n=n)
+        self._shard_dev[key] = sh                # (re)insert: LRU refresh
+        return sh
+
     def mark_deleted(self, vector_id: int) -> None:
-        """Keep the device-side tombstone mask in sync (no re-upload of the
-        index arrays — a single scatter into the resident mask).  Delta
-        ids past the upload watermark are filtered host-side when their
-        candidate lists are built."""
+        """Keep the device-side tombstone mask in sync (no re-upload of
+        the index arrays — a single scatter into the resident mask).
+        Delta ids past the upload watermark are filtered host-side when
+        their candidate lists are built.  Sharded residencies sync lazily
+        instead — one batched scatter at the head of each sharded batch
+        (``ShardedDeviceIndex.sync_tombstones``), not one per delete."""
         if self._dev is not None and vector_id < self._dev_n:
             self._dev["deleted"] = (
                 self._dev["deleted"].at[vector_id].set(True))
@@ -417,19 +462,22 @@ class PackedRuntime:
         segments: List[Tuple[int, int]] = []
         raw_segments: List[Tuple[int, int]] = []
         graph_states: List[int] = []
+        states: List[int] = []
         size = 0
         u = state
         while u != -1:
             lo, hi = int(self.base_ptr[u]), int(self.base_ptr[u + 1])
             if hi > lo:
                 segments.append((lo, hi))
+                states.append(u)
                 size += hi - lo
                 if self.kind[u] == KIND_RAW:
                     raw_segments.append((lo, hi))
                 else:
                     graph_states.append(u)
             u = int(self.inherit[u])
-        return ChainCover(segments, raw_segments, graph_states, size)
+        return ChainCover(segments, raw_segments, graph_states, size,
+                          states=states)
 
     def chain_delta_ids(self, state: int) -> np.ndarray:
         """New ids in V_state since this generation froze, sorted.  Walks
@@ -1039,36 +1087,58 @@ class PackedRuntime:
 
     # ---- residual verification (strategy c) --------------------------- #
 
-    def _dense_topk(self, qmat: np.ndarray, cand: np.ndarray, m: int
-                    ) -> Tuple[np.ndarray, np.ndarray]:
-        """Exact top-m of ``qmat`` against ``vectors[cand]`` (indices into
-        ``cand``).  m is unbounded (the over-fetch loop outgrows the
-        128-lane streaming kernel), so the device path uses a dense
-        distance + ``lax.top_k`` instead of Pallas."""
-        m = min(m, len(cand))
+    def _dense_dist(self, qmat: np.ndarray, cand: np.ndarray):
+        """The (Q, |cand|) dense distance matrix of ``qmat`` against
+        ``vectors[cand]`` — computed ONCE per residual source and kept on
+        the backend that computed it (device array on jax, ndarray on
+        numpy) so the over-fetch loop re-ranks without recomputing or
+        shipping the whole matrix."""
         if self.backend == "jax":
-            import jax
             import jax.numpy as jnp
             x = jnp.asarray(qmat)
             y = self._device_rows(np.asarray(cand))
             if self.metric == "l2":
                 d = (jnp.sum(x * x, 1, keepdims=True) + jnp.sum(y * y, 1)
                      - 2.0 * x @ y.T)
-                d = jnp.maximum(d, 0.0)
-            else:
-                d = -(x @ y.T)
-            neg, idx = jax.lax.top_k(-d, m)
-            return np.asarray(-neg), np.asarray(idx)
+                return jnp.maximum(d, 0.0)
+            return -(x @ y.T)
         from ..kernels import ops
-        return ops.topk_numpy(qmat, self.vectors[cand], m,
-                              metric=self.metric)
+        x = np.asarray(qmat, dtype=np.float32)
+        y = np.asarray(self.vectors[cand], dtype=np.float32)
+        if self.metric == "l2":
+            d = (np.sum(x * x, axis=1, keepdims=True)
+                 + np.sum(y * y, axis=1) - 2.0 * (x @ y.T))
+            np.maximum(d, 0.0, out=d)
+            return d
+        return -(x @ y.T)
+
+    def _rank_topm(self, dmat, m: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-m (ascending distances, column indices) of a cached dense
+        distance matrix; only the (Q, m) winners cross to the host.  m is
+        unbounded (the over-fetch loop outgrows the 128-lane streaming
+        kernel), so the device path uses ``lax.top_k``."""
+        m = min(m, int(dmat.shape[1]))
+        if self.backend == "jax":
+            import jax
+            neg, idx = jax.lax.top_k(-dmat, m)
+            return np.asarray(-neg), np.asarray(idx)
+        part = np.argpartition(dmat, m - 1, axis=1)[:, :m]
+        pv = np.take_along_axis(dmat, part, axis=1)
+        order = np.argsort(pv, axis=1, kind="stable")
+        return (np.take_along_axis(pv, order, axis=1),
+                np.take_along_axis(part, order, axis=1))
 
     def _execute_residual(self, queries, e: PlanEntry, s: CompiledSource,
                           k: int, parts) -> None:
-        """Over-fetch + exact host-side verification: fetch top-m of the
-        automaton prefilter, verify each hit against the full predicate on
-        its sequence, double m and re-fetch until every request has k
-        verified hits (or the prefilter is exhausted)."""
+        """Over-fetch + exact host-side verification: compute the dense
+        distance matrix ONCE (kept on its backend), rank the top-m, and
+        verify hits in distance order, doubling m — a re-rank of the
+        cached matrix plus more verification, never a distance recompute
+        — until every request has k verified hits (or the prefilter is
+        exhausted).  The old loop recomputed the full dense distance
+        matrix every round, paying O(rounds · Q · |cand| · d) for
+        distances it already had; only the (Q, m) winners ever cross to
+        the host."""
         cand = self._live(s.ids)
         if len(cand) == 0:
             return
@@ -1083,9 +1153,10 @@ class PackedRuntime:
             return v
 
         reqs = e.requests
+        dmat = self._dense_dist(queries[reqs], cand)
         m = min(len(cand), max(4 * k, k))
         while True:
-            d, li = self._dense_topk(queries[reqs], cand, m)
+            d, li = self._rank_topm(dmat, m)
             done = True
             for row in range(len(reqs)):
                 cnt = 0

@@ -380,6 +380,8 @@ class CompiledSource:
     strategy: str                                # chain|scan|filtered_graph|residual
     anchor: int = -1                             # anchor state (chain-backed)
     segments: List[Tuple[int, int]] = field(default_factory=list)
+    seg_states: List[int] = field(default_factory=list)  # chain state per
+                                                 # segment (sharded CSR key)
     raw_segments: List[Tuple[int, int]] = field(default_factory=list)
     graph_states: List[int] = field(default_factory=list)
     ids: Optional[np.ndarray] = None             # explicit candidate ids
@@ -518,6 +520,7 @@ def _contains_source(node: Contains, ctx: _Ctx) -> Optional[CompiledSource]:
     cov = ctx.cover(st)
     return CompiledSource(strategy="chain", anchor=st,
                           segments=cov.segments,
+                          seg_states=cov.states,
                           raw_segments=cov.raw_segments,
                           graph_states=cov.graph_states,
                           delta_ids=delta if len(delta) else None,
@@ -582,6 +585,7 @@ def _and_source(node: And, ctx: _Ctx) -> Optional[CompiledSource]:
             int(FILTERED_GRAPH_MIN_FRAC * ctx.cover_size(anchor_state))):
         return CompiledSource(strategy="filtered_graph", anchor=anchor_state,
                               segments=cov.segments,
+                              seg_states=cov.states,
                               raw_segments=cov.raw_segments,
                               graph_states=cov.graph_states,
                               allowed=allowed, est=sel,

@@ -275,18 +275,30 @@ class VectorMaton:
         tombstone-filtered at execute time and don't.  The cache is
         bounded: compiled boolean sources carry O(n) id arrays, so a
         serving stream of ever-distinct predicates must not grow it
-        without bound (FIFO eviction; coalescing only needs the batch's
-        working set)."""
+        without bound.  Eviction is LRU with a stale-first sweep: a hit
+        refreshes recency (hot predicates survive a thrash of distinct
+        cold ones), and entries stamped with an outdated delta version —
+        dead weight that can never hit again — are purged before any
+        live entry is evicted."""
         pred = as_predicate(pattern)
         rt = runtime if runtime is not None else self.runtime
         key = pred.key()
+        version = rt.delta.version
         hit = rt._pred_cache.get(key)
-        if hit is not None and hit[0] == rt.delta.version:
-            return hit[1]
+        if hit is not None:
+            if hit[0] == version:
+                rt._pred_cache.pop(key)          # re-insert: LRU refresh
+                rt._pred_cache[key] = hit
+                return hit[1]
+            del rt._pred_cache[key]              # version-stale: dead entry
         cp = compile_predicate(pred, self.esam, rt)
+        if len(rt._pred_cache) >= self._PRED_CACHE_MAX:
+            for stale_key in [k for k, (v, _) in rt._pred_cache.items()
+                              if v != version]:
+                del rt._pred_cache[stale_key]
         while len(rt._pred_cache) >= self._PRED_CACHE_MAX:
             rt._pred_cache.pop(next(iter(rt._pred_cache)))
-        rt._pred_cache[key] = (rt.delta.version, cp)
+        rt._pred_cache[key] = (version, cp)
         return cp
 
     def plan(self, patterns: Sequence,

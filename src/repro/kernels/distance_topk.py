@@ -304,6 +304,49 @@ def assemble_flat_candidates(vectors, base_ids, deleted, starts, lens,
     return y, cseg, gid_flat
 
 
+def segmented_dense_topk(x: jax.Array, y: jax.Array, qseg: jax.Array,
+                         owners: jax.Array, k: int, *, metric: str = "l2"):
+    """Dense segmented top-k in plain jnp — the *shard-local* sweep of the
+    distributed executor (DESIGN.md §5).
+
+    Runs inside ``shard_map``, where a ``pallas_call`` grid over the
+    ragged per-shard candidate pool buys nothing (the pool is already a
+    bounded, bucketed slice of one shard): a single MXU matmul plus
+    ``lax.top_k`` is the winning schedule, mirroring what ``sharded_topk``
+    always did for the unconstrained case.
+
+    ``x`` (Q, d) queries, ``y`` (C, d) candidate rows, ``qseg`` (Q,) owner
+    id per query row, ``owners`` (C,) owner id per candidate (negative =
+    unmatchable padding).  Returns (Q, k) ascending distances plus
+    positions into ``y``; unfilled slots are (+inf, -1) — the same
+    sentinel contract as ``ops.topk_numpy``.
+    """
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    xy = jax.lax.dot_general(
+        xf, yf, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if metric == "l2":
+        x2 = jnp.sum(xf * xf, axis=-1, keepdims=True)
+        y2 = jnp.sum(yf * yf, axis=-1)[None, :]
+        dist = jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)
+    else:
+        dist = -xy
+    match = qseg[:, None] == owners[None, :]
+    dist = jnp.where(match, dist, jnp.inf)
+    kk = min(k, int(y.shape[0]))
+    neg, idx = jax.lax.top_k(-dist, kk)
+    vals = -neg
+    bad = ~jnp.isfinite(vals)
+    vals = jnp.where(bad, jnp.inf, vals)
+    idx = jnp.where(bad, -1, idx)
+    if kk < k:
+        vals = jnp.pad(vals, ((0, 0), (0, k - kk)),
+                       constant_values=jnp.inf)
+        idx = jnp.pad(idx, ((0, 0), (0, k - kk)), constant_values=-1)
+    return vals, idx
+
+
 @functools.partial(jax.jit, static_argnames=("k", "metric", "block_q",
                                              "block_n", "interpret",
                                              "valid_n"))

@@ -391,7 +391,35 @@ def merge_topk_device(big_d: jax.Array, big_i: jax.Array, sel: jax.Array,
     return jax.vmap(one)(d, iu)
 
 
+def merge_topk_allgather(vals: jax.Array, gids: jax.Array, axis: str,
+                         k: int) -> Tuple[jax.Array, jax.Array]:
+    """Cross-shard top-k fold, on device, inside a ``shard_map`` body —
+    the all-gather extension of the device merge (DESIGN.md §5).
+
+    ``vals``/``gids``: this shard's (Q, k) local winners with (+inf, -1)
+    sentinel padding.  All shards' winners are gathered into a
+    (Q, shards·k) pool and reduced with one ``lax.top_k``; collective
+    volume is O(shards · Q · k · 8 bytes) per launch, independent of the
+    table size.  Shard candidate sets are disjoint (every global id lives
+    on exactly one shard), so no id-dedup pass is needed — sentinels sort
+    last and are re-stamped (+inf, -1) so a pool with fewer than k live
+    rows returns the same padding the NumPy merge emits.
+    """
+    av = jax.lax.all_gather(vals, axis, axis=0)      # (shards, Q, k)
+    ai = jax.lax.all_gather(gids, axis, axis=0)
+    q = vals.shape[0]
+    av = av.transpose(1, 0, 2).reshape(q, -1)
+    ai = ai.transpose(1, 0, 2).reshape(q, -1)
+    neg, pos = jax.lax.top_k(-av, k)
+    out_v = -neg
+    out_i = jnp.take_along_axis(ai, pos, axis=1)
+    bad = ~jnp.isfinite(out_v) | (out_i < 0)
+    return (jnp.where(bad, jnp.inf, out_v),
+            jnp.where(bad, -1, out_i))
+
+
 __all__ = ["pairwise_sqdist", "topk", "topk_segmented",
            "topk_segmented_desc", "topk_segmented_numpy", "topk_numpy",
-           "merge_topk_device", "bucket", "launch_stats",
-           "reset_launch_stats", "record_launch", "jit_cache_sizes", "ref"]
+           "merge_topk_device", "merge_topk_allgather", "bucket",
+           "launch_stats", "reset_launch_stats", "record_launch",
+           "jit_cache_sizes", "ref"]

@@ -42,8 +42,12 @@ class ContinuousBatcher:
 
     ``budget``: max Σ|V_p| distance rows per wave (device batch budget).
     ``max_wave``: max requests per wave.
-    Fairness: FIFO within cost class; a request can be deferred at most
-    ``max_defer`` waves before it is force-admitted (no starvation).
+    Fairness: strict FIFO — admission stops at the first request that
+    would blow the budget, so a passed-over request is the very next
+    wave's head and admits unconditionally (no starvation by
+    construction).  ``max_defer`` is a defensive backstop: it can only
+    bind if admission order ever stops being pure arrival order (e.g. a
+    future priority scheduler).
 
     Writes interleave with reads (DESIGN.md §4): ``submit_insert``
     enqueues a record, and each wave applies pending writes at its head —
@@ -118,27 +122,36 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------------ #
     def next_wave(self) -> List[_Queued]:
-        """Admit FIFO under the cost budget; force-admit starved items."""
+        """Admit FIFO under the cost budget; force-admit starved items.
+
+        Admission stops at the first request that would blow the budget:
+        only that request is *passed over* (and only its deferral counter
+        ticks) — the rest of the queue was never examined, so it is not
+        deferred.  The old scan-the-whole-queue behaviour popped and
+        deferred EVERY queued request once the budget was spent, so under
+        a deep backlog the entire queue's counters inflated each wave and
+        everything force-admitted together after ``max_defer`` waves,
+        collapsing the budget discipline to max_wave-sized bursts."""
         wave: List[_Queued] = []
         spent = 0
-        skipped: List[_Queued] = []
         while self._queue and len(wave) < self.max_wave:
-            q = heapq.heappop(self._queue)
+            q = self._queue[0]                   # peek: FIFO head
             force = self._deferred.get(q.seq, 0) >= self.max_defer
             if wave and not force and spent + q.cost > self.budget:
                 self._deferred[q.seq] = self._deferred.get(q.seq, 0) + 1
-                skipped.append(q)
-                continue
+                break
+            heapq.heappop(self._queue)
+            self._deferred.pop(q.seq, None)      # admitted: counter done
             wave.append(q)
             spent += q.cost
-        for q in skipped:
-            heapq.heappush(self._queue, q)
         return wave
 
     def run_wave(self) -> Dict[int, Response]:
         """Execute one wave through the batched planner/executor: the wave's
-        requests (grouped by k/ef) hit ``query_batch``, whose planner
-        coalesces same-state requests into shared plan entries."""
+        requests (grouped by k/ef) hit the engine's ``query_batch``, whose
+        planner coalesces same-state requests into shared plan entries
+        (and which routes through the sharded executor when the engine
+        has a mesh attached)."""
         self._apply_writes()
         wave = self.next_wave()
         out: Dict[int, Response] = {}
@@ -150,8 +163,8 @@ class ContinuousBatcher:
             queries = np.stack([np.asarray(q.request.vector, np.float32)
                                 for q in items])
             patterns = [q.request.pattern for q in items]
-            results = self.engine.index.query_batch(queries, patterns, k,
-                                                    ef_search=ef)
+            results = self.engine.query_batch(queries, patterns, k,
+                                              ef_search=ef)
             t1 = time.perf_counter()
             for q, (d, i) in zip(items, results):
                 out[q.seq] = Response(ids=i, distances=d,

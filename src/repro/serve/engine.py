@@ -56,17 +56,44 @@ class Response:
 
 
 class RetrievalEngine:
+    """``mesh`` switches the engine to distributed serving (DESIGN.md
+    §5): every batch routes through the sharded descriptor executor —
+    the packed generation row-sharded over ``shard_axis`` at upload time,
+    one shard_map sweep per wave, cross-shard top-k folded on device.
+    ``mesh=None`` (default) serves single-chip through the packed
+    planner/executor."""
+
     def __init__(self, vectors: np.ndarray, sequences: Sequence[str],
                  config: Optional[VectorMatonConfig] = None,
-                 workers: int = 1):
+                 workers: int = 1, mesh=None, shard_axis: str = "data"):
         self.index = VectorMaton(vectors, sequences, config,
                                  workers=workers)
+        self.mesh = mesh
+        self.shard_axis = shard_axis
 
     # ------------------------------------------------------------------ #
+    def query_batch(self, queries: np.ndarray, patterns: Sequence,
+                    k: int, ef_search: int = 64
+                    ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """The engine's execution entry point: single-chip packed
+        executor, or the sharded plan executor when a mesh is attached.
+        Both plan and execute against ONE runtime snapshot, so an
+        insert-triggered compaction swap never splits a batch."""
+        if self.mesh is None:
+            return self.index.query_batch(queries, patterns, k,
+                                          ef_search=ef_search)
+        from ..distributed.sharded_search import sharded_plan_topk
+        rt = self.index.snapshot()
+        plan = self.index.plan(patterns, rt)
+        return sharded_plan_topk(self.mesh, None, rt, queries, plan, k,
+                                 metric=self.index.config.metric,
+                                 axis=self.shard_axis)
+
     def serve(self, req: Request) -> Response:
         t0 = time.perf_counter()
-        d, i = self.index.query(req.vector, req.pattern, req.k,
-                                ef_search=req.ef_search)
+        d, i = self.query_batch(
+            np.asarray(req.vector, np.float32)[None, :], [req.pattern],
+            req.k, ef_search=req.ef_search)[0]
         return Response(ids=i, distances=d,
                         latency_s=time.perf_counter() - t0)
 
@@ -85,8 +112,7 @@ class RetrievalEngine:
             queries = np.stack([np.asarray(reqs[i].vector, np.float32)
                                 for i in idxs])
             patterns = [reqs[i].pattern for i in idxs]
-            results = self.index.query_batch(queries, patterns, k,
-                                             ef_search=ef)
+            results = self.query_batch(queries, patterns, k, ef_search=ef)
             dt = time.perf_counter() - t0
             for i, (d, ids) in zip(idxs, results):
                 out[i] = Response(ids=ids, distances=d, latency_s=dt)
@@ -114,9 +140,12 @@ class RetrievalEngine:
         self.index.save(path)
 
     @classmethod
-    def restore(cls, path: str) -> "RetrievalEngine":
+    def restore(cls, path: str, mesh=None,
+                shard_axis: str = "data") -> "RetrievalEngine":
         self = cls.__new__(cls)
         self.index = VectorMaton.load(path)
+        self.mesh = mesh
+        self.shard_axis = shard_axis
         return self
 
 

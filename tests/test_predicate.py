@@ -102,6 +102,45 @@ def test_pred_cache_bounded():
     assert len(vm.runtime._pred_cache) <= vm._PRED_CACHE_MAX
 
 
+def test_pred_cache_thrash_keeps_hot_and_purges_stale():
+    """Regression: the cache FIFO-evicted on capacity while entries
+    stamped with stale delta versions squatted in slots.  A hot predicate
+    touched every wave must survive a thrash of distinct cold ones (hit
+    refreshes recency), and version-stale entries must be purged before
+    any live entry is evicted."""
+    rng = np.random.default_rng(11)
+    seqs = ["ab", "ba", "aa", "bb"]
+    vecs = np.eye(4, 4, dtype=np.float32)
+    vm = VectorMaton(vecs, seqs,
+                     VectorMatonConfig(T=10 ** 9, auto_compact=False))
+    rt = vm.runtime
+    hot = Contains("a") & Contains("b")
+    hot_key = vm.compile(hot).key
+    # thrash: a serving stream of ever-distinct cold predicates, with the
+    # hot one touched between every few — old FIFO evicted it regardless
+    for j in range(3 * vm._PRED_CACHE_MAX):
+        vm.compile(Contains("a") & Contains("b" * (j + 2)))
+        if j % 5 == 0:
+            assert vm.compile(hot) is rt._pred_cache[hot_key][1], \
+                "hot predicate evicted by cold thrash"
+    assert len(rt._pred_cache) <= vm._PRED_CACHE_MAX
+    assert hot_key in rt._pred_cache
+    # fill the cache, then stale every entry with an insert: the next
+    # compile that hits capacity must purge the stale squatters instead
+    # of evicting live entries
+    vm.insert(rng.standard_normal(4).astype(np.float32), "ab")
+    assert len(rt._pred_cache) >= vm._PRED_CACHE_MAX - 1
+    fresh = vm.compile(hot)
+    assert rt._pred_cache[hot_key][1] is fresh
+    for j in range(3):                         # drive past capacity
+        vm.compile(Contains("b" * (j + 2)))
+    # the stale generation is gone wholesale; only live entries remain
+    assert all(v == rt.delta.version
+               for v, _ in rt._pred_cache.values())
+    assert len(rt._pred_cache) <= 5
+    assert hot_key in rt._pred_cache
+
+
 def test_nnf_pushes_not_to_leaves():
     p = normalize(Not(And([Contains("a"), Not(Contains("b"))])))
     assert isinstance(p, Or)

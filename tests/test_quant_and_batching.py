@@ -139,3 +139,38 @@ def test_batcher_budget_limits_wave(batcher):
     assert 1 <= len(wave) <= b.max_wave
     b._queue.clear()
     b._deferred.clear()
+
+
+def test_batcher_deep_backlog_keeps_budget_discipline(batcher):
+    """Regression: with a deep backlog the old next_wave popped and
+    deferred EVERY queued request once the budget was spent, so the whole
+    queue's deferral counters inflated each wave and everything
+    force-admitted together after max_defer waves — a max_wave-sized
+    burst that ignored the budget.  Admission must stop at the first
+    over-budget request (only that one is passed over), keeping every
+    wave at ~budget."""
+    b, vecs, seqs = batcher
+    rng = np.random.default_rng(4)
+    pat = sample_patterns(seqs, 1, 1)[0]     # one expensive predicate
+    cost = b.engine.index.compile(pat).est
+    assert cost > 0
+    deep = 6 * b.max_defer                   # deep enough to starve-admit
+    for _ in range(deep):
+        b.submit(Request(vector=rng.standard_normal(
+            vecs.shape[1]).astype(np.float32), pattern=pat, k=5))
+    per_wave = max(1, b.budget // cost)      # what the budget admits
+    waves = 0
+    while b.pending() and waves < 4 * deep:
+        wave = b.next_wave()
+        assert wave, "no progress"
+        spent = sum(q.cost for q in wave)
+        # first item admits unconditionally; everything after fits the
+        # budget — a deep queue must never burst past ~budget per wave
+        assert len(wave) <= per_wave + 1, (len(wave), per_wave)
+        assert spent <= b.budget + cost, (spent, b.budget)
+        waves += 1
+    assert not b.pending()
+    # deferral book-keeping drained with the queue: only passed-over
+    # heads were ever counted, and nothing leaks across waves
+    assert len(b._deferred) <= 1
+    b._deferred.clear()
