@@ -180,6 +180,18 @@ def run_device_smoke(profile: bool = False, seed: int = 0) -> dict:
             print(f"#   {key:>20}: {vm_g.runtime.traffic[key] / batches:10.1f} B")
         print(f"#   {'launches/batch':>20}: "
               f"{stats['launches'] / 20:10.2f}")
+        ms = vm_g.maintenance_stats()
+        print("# wave timing breakdown (cumulative ms; launch is "
+              "trace+dispatch, merge absorbs the device sync):")
+        for key in ("time_plan_ms", "time_upload_ms", "time_launch_ms",
+                    "time_merge_ms"):
+            print(f"#   {key:>20}: {ms.get(key, 0.0):10.2f} ms")
+            out[key] = float(ms.get(key, 0.0))
+        print("# sq8 scan path (batch-level certificate):")
+        for key in ("sq8_batches", "sq8_certified", "sq8_escalations",
+                    "sq8_fallbacks"):
+            print(f"#   {key:>20}: {ms.get(key, 0):10d}")
+            out[key] = int(ms.get(key, 0))
     save_json("qps_recall_device_smoke", out)
     return out
 

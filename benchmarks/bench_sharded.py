@@ -103,8 +103,11 @@ def run(n: int = 1001, dim: int = 32, n_requests: int = 32,
         "qps": served / float(np.sum(lat)),
         "p50_ms": float(np.percentile(lat_ms, 50)),
         "p99_ms": float(np.percentile(lat_ms, 99)),
-        "launches_per_wave": (steady.get("sharded_sweep", 0)
-                              - warm.get("sharded_sweep", 0)) / waves,
+        # the sweep may run quantized ("sq8_sharded_sweep") or fp32
+        # ("sharded_sweep"); either way one wave == one shard_map launch
+        "launches_per_wave": sum(steady.get(kind, 0) - warm.get(kind, 0)
+                                 for kind in ("sharded_sweep",
+                                              "sq8_sharded_sweep")) / waves,
         "shard_mask_bytes_per_wave": per_wave("shard_mask_bytes"),
         "shard_descriptor_bytes_per_wave":
             per_wave("shard_descriptor_bytes"),

@@ -99,7 +99,10 @@ t0 = dict(rt.traffic)
 sharded_plan_topk(mesh, base, rt, q_dev, plan, 10)
 st = ops.launch_stats()
 t1 = rt.traffic
-print(f"warm wave: {st.get('sharded_sweep', 0)} shard_map sweep, "
+# one sweep regardless of scan dtype: the sq8-default path records
+# "sq8_sharded_sweep", the fp32 path "sharded_sweep"
+sweeps = st.get("sharded_sweep", 0) + st.get("sq8_sharded_sweep", 0)
+print(f"warm wave: {sweeps} shard_map sweep, "
       f"{t1['shard_mask_bytes'] - t0['shard_mask_bytes']} dense-mask B, "
       f"{t1['shard_tail_bytes'] - t0['shard_tail_bytes']} tail B, "
       f"{t1['shard_descriptor_bytes'] - t0['shard_descriptor_bytes']} "

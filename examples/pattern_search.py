@@ -72,10 +72,13 @@ print(f"{len(requests)} requests in {dt:.2f}s ({len(requests)/dt:.0f} QPS)"
 p2 = sample_patterns(sequences, 2, 8)
 p3 = sample_patterns(sequences, 3, 8)
 long_seqs = [s for s in sequences if len(s) >= 8]
+# sampled literals are quoted: mtg substrings can contain spaces (and in
+# principle a standalone uppercase keyword), which the tokenizer would
+# otherwise split into separate tokens
 predicates = (
-    [f"{a} AND {b}" for a, b in zip(p2[:3], p3[:3])]
-    + [f"{a} OR {b}" for a, b in zip(p3[:3], p3[3:6])]
-    + [f"{a} AND NOT {b}" for a, b in zip(p2[3:5], p3[5:7])]
+    [f"'{a}' AND '{b}'" for a, b in zip(p2[:3], p3[:3])]
+    + [f"'{a}' OR '{b}'" for a, b in zip(p3[:3], p3[3:6])]
+    + [f"'{a}' AND NOT '{b}'" for a, b in zip(p2[3:5], p3[5:7])]
     + [f"LIKE '%{s[:3]}%{s[-3:]}%'" for s in long_seqs[:3]]   # ordered LIKE
 )
 pred_reqs = [Request(vector=vectors[rng.integers(len(vectors))]

@@ -55,6 +55,13 @@ python -m benchmarks.bench_device_exec --smoke --baseline BENCH_PR4.json
 # wave; regressions against the committed BENCH_PR5.json trajectory FAIL
 python -m benchmarks.bench_sharded --smoke --baseline BENCH_PR5.json
 
+# real-scale frontier gate (DESIGN.md §6): the smoke frontier must run
+# on the COMPILED kernels (not Pallas interpret), keep the exact
+# strategies at recall 1.0, keep the sq8 default bit-equal to the fp32
+# scan, and stay within recall/QPS tolerance of the committed
+# BENCH_PR6.json smoke section (refreshed in place on success)
+python -m benchmarks.bench_scalability --smoke --baseline BENCH_PR6.json
+
 # churn smoke (write path, DESIGN.md §4): records insert throughput and
 # QPS under a 10% write mix, and asserts that full runtime rebuilds
 # during churn equal the number of compactions — never the insert count —

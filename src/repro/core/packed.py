@@ -65,6 +65,8 @@ view across the swap.
 
 from __future__ import annotations
 
+import time
+import warnings
 from collections import Counter
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -229,7 +231,8 @@ class PackedRuntime:
                  graph_objs: Dict[int, object], *, metric: str = "l2",
                  backend: str = "numpy", deleted: Optional[set] = None,
                  sequences: Optional[Sequence] = None,
-                 quantize: str = "none", generation: int = 0):
+                 quantize: str = "none", accum: str = "f32",
+                 generation: int = 0):
         self.vectors = vectors          # live view; base rows are immutable
         self.kind = kind
         self.inherit = inherit
@@ -242,6 +245,7 @@ class PackedRuntime:
         self.deleted = deleted if deleted is not None else set()
         self.sequences = list(sequences) if sequences is not None else []
         self.quantize = quantize
+        self.accum = accum
         self.generation = generation
         self.n_states = len(kind)       # state-count watermark at freeze
         self.delta = DeltaRuntime(len(vectors), len(kind))
@@ -272,6 +276,30 @@ class PackedRuntime:
             "mask_bytes": 0, "shard_batches": 0, "shard_mask_bytes": 0,
             "shard_descriptor_bytes": 0, "shard_tail_bytes": 0,
             "shard_query_bytes": 0}
+        # SQ8 scan-path accounting: every batch is either certified
+        # (provably equal to the fp32 scan) or escalated to it; fallbacks
+        # count batches the eligibility gate routed to fp32 outright
+        self.sq8_stats: Dict[str, int] = {
+            "batches": 0, "certified": 0, "escalations": 0, "fallbacks": 0}
+        self._sq8_warned = False
+        # adaptive escalation policy: a workload whose candidate sets are
+        # too dense for the worst-case certificate (big n, tight
+        # neighbour gaps) would pay int8 scan + rerank + fp32 scan every
+        # batch; after this many CONSECUTIVE escalations the runtime
+        # flips to the fp32 scan outright (counted as fallbacks), so the
+        # sq8 default is never asymptotically slower than fp32.  A
+        # certified batch resets the streak.  ``sq8_escalate=False``
+        # trusts the rerank output without the certificate sync — the
+        # approximate operating point the frontier benchmark measures.
+        self.sq8_escalate = True
+        self._sq8_bad_streak = 0
+        self.SQ8_MAX_STREAK = 3
+        # cumulative per-wave wall-clock (ms), surfaced by
+        # maintenance_stats as time_*_ms.  Device dispatch is async, so
+        # launch_ms is trace+dispatch cost and merge_ms absorbs the sync.
+        self.wave_times: Dict[str, float] = {
+            "plan_ms": 0.0, "upload_ms": 0.0, "launch_ms": 0.0,
+            "merge_ms": 0.0}
 
     # ------------------------------------------------------------------ #
     # construction
@@ -310,6 +338,7 @@ class PackedRuntime:
                  metric=vm.config.metric, backend=vm.config.backend,
                  deleted=vm.deleted,
                  quantize=getattr(vm.config, "quantize", "none"),
+                 accum=getattr(vm.config, "accum", "f32"),
                  generation=generation)
         # share (don't copy) the live sequence list: residual verification
         # of delta ids must see sequences appended after this freeze
@@ -367,8 +396,9 @@ class PackedRuntime:
                     "level0": jax.device_put(jnp.asarray(lvl)),
                     "entry": jax.device_put(jnp.asarray(ent)),
                 }
+            vec_dev = jax.device_put(jnp.asarray(self.vectors))
             self._dev = {
-                "vectors": jax.device_put(jnp.asarray(self.vectors)),
+                "vectors": vec_dev,
                 "base_ids": jax.device_put(
                     jnp.asarray(self.base_ids, jnp.int32)),
                 "deleted": jax.device_put(jnp.asarray(dmask)),
@@ -380,6 +410,29 @@ class PackedRuntime:
                 "graph_buckets": buckets,
                 "graph_slot": slots,
             }
+        if self.quantize == "sq8" and "quant" not in self._dev:
+            # resident int8 table: codes + per-row (scale, sqnorm,
+            # code-L1) — the SQ8 scan reads these instead of the fp32
+            # rows; derived on device from the already-resident table so
+            # nothing extra ships from the host.  Outside the ``if`` so
+            # a runtime toggled to sq8 after its first upload (bench
+            # strategy sweeps) still gets the table.
+            import jax
+            import jax.numpy as jnp
+
+            from ..kernels.quant import quantize_sq8_ext
+            if self._dev_n:
+                self._dev["quant"] = tuple(
+                    jax.device_put(a)
+                    for a in quantize_sq8_ext(self._dev["vectors"]))
+            else:
+                d = (int(self.vectors.shape[1])
+                     if self.vectors.ndim == 2 else 0)
+                self._dev["quant"] = (
+                    jnp.empty((0, d), jnp.int8),
+                    jnp.empty((0, 1), jnp.float32),
+                    jnp.empty((0, 1), jnp.float32),
+                    jnp.empty((0, 1), jnp.float32))
         return self._dev
 
     _SHARD_DEV_MAX = 4
@@ -587,15 +640,19 @@ class PackedRuntime:
             else:
                 self._execute_scan_device(queries, scan_items, k, launches,
                                           dev_parts)
+            t0 = time.perf_counter()
             self._execute_graphs_device(queries, graph_shared, graph_filtered,
                                         k, ef_search, launches, dev_parts)
+            self.wave_times["launch_ms"] += (time.perf_counter() - t0) * 1e3
         else:
             self._execute_scan_host(queries, scan_items, k, parts)
             self._execute_graphs_host(queries, graph_shared, graph_filtered,
                                       k, ef_search, parts)
         for e, s in residual_items:
             self._execute_residual(queries, e, s, k, parts)
+        t0 = time.perf_counter()
         self._merge(plan, launches, dev_parts, parts, k, out)
+        self.wave_times["merge_ms"] += (time.perf_counter() - t0) * 1e3
         return out
 
     def _merge(self, plan: QueryPlan, launches, dev_parts, parts, k: int,
@@ -871,17 +928,21 @@ class PackedRuntime:
         several sources expand into one query row per (request, source)
         pair; outputs stay on device for the merge fold."""
         from ..kernels import ops
+        t0 = time.perf_counter()
         flat = self._assemble_scan_batch(queries, scan_items)
+        self.wave_times["upload_ms"] += (time.perf_counter() - t0) * 1e3
         if flat is None:
             return
         (q_rows, q_owner, dstarts, dlens, downers, tres_i, tres_ow,
          tship_i, tship_ow, rows) = flat
         dev = self.to_device()
+        t0 = time.perf_counter()
         v, g = ops.topk_segmented_desc(
             dev["vectors"], dev["base_ids"], dev["deleted"],
             queries[q_rows], q_owner, dstarts, dlens, downers,
             tres_i, tres_ow, tship_i, rows, tship_ow, k,
-            metric=self.metric)
+            metric=self.metric, accum=self.accum)
+        self.wave_times["launch_ms"] += (time.perf_counter() - t0) * 1e3
         li = len(launches)
         launches.append((v, g))
         for row, r in enumerate(q_rows):
@@ -889,25 +950,72 @@ class PackedRuntime:
 
     def _execute_scan_sq8(self, queries, scan_items, k, launches,
                           dev_parts) -> None:
-        """Opt-in SQ8 backend (``VectorMatonConfig.quantize='sq8'``): the
-        whole batch's candidate sets run ONE segmented quantized launch +
-        fp32 rerank — same descriptor/tail assembly as the fp32 path (the
-        per-item launch loop this replaces paid a trace + candidate
-        upload per scan item).  Overfetch is clamped so k·overfetch stays
-        inside the rerank kernel's 128-lane budget."""
-        from ..kernels.quant import topk_sq8_segmented_desc
+        """Default SQ8 scan path (``VectorMatonConfig.quantize='sq8'``):
+        the whole batch's candidate sets run ONE segmented int8 launch
+        against the resident quantized table, an fp32 rerank of the
+        over-fetched top-kq, and the exactness certificate
+        (``quant._sq8_topk_descriptors``).  A batch whose certificate
+        fails on any query row is re-run through the fp32 descriptor
+        path, so results always equal the fp32 scan's; ``sq8_stats``
+        counts certified vs escalated batches.  Batches the eligibility
+        gate rejects outright (metric/dim/k outside ``sq8_supported``)
+        fall back to the fp32 path with a one-time warning."""
+        from ..kernels import ops
+        from ..kernels.quant import sq8_supported, topk_sq8_segmented_desc
+        d_dim = int(queries.shape[1])
+        if not sq8_supported(k, d_dim, self.metric):
+            if not self._sq8_warned:
+                warnings.warn(
+                    f"sq8 scan path unsupported for k={k}, dim={d_dim}, "
+                    f"metric={self.metric!r}; falling back to the fp32 "
+                    "scan (recorded in sq8_stats['fallbacks'])",
+                    RuntimeWarning, stacklevel=3)
+                self._sq8_warned = True
+            self.sq8_stats["fallbacks"] += 1
+            self._execute_scan_device(queries, scan_items, k, launches,
+                                      dev_parts)
+            return
+        if self.sq8_escalate and self._sq8_bad_streak >= self.SQ8_MAX_STREAK:
+            # the certificate keeps failing on this workload: int8 scan
+            # plus escalation is pure overhead, so serve fp32 directly
+            self.sq8_stats["fallbacks"] += 1
+            self._execute_scan_device(queries, scan_items, k, launches,
+                                      dev_parts)
+            return
         overfetch = max(1, min(4, 128 // max(k, 1)))
+        t0 = time.perf_counter()
         flat = self._assemble_scan_batch(queries, scan_items)
+        self.wave_times["upload_ms"] += (time.perf_counter() - t0) * 1e3
         if flat is None:
             return
         (q_rows, q_owner, dstarts, dlens, downers, tres_i, tres_ow,
          tship_i, tship_ow, rows) = flat
         dev = self.to_device()
-        v, g = topk_sq8_segmented_desc(
-            dev["vectors"], dev["base_ids"], dev["deleted"],
+        self.sq8_stats["batches"] += 1
+        t0 = time.perf_counter()
+        v, g, cert = topk_sq8_segmented_desc(
+            dev["vectors"], dev["quant"], dev["base_ids"], dev["deleted"],
             queries[q_rows], q_owner, dstarts, dlens, downers,
             tres_i, tres_ow, tship_i, rows, tship_ow, k,
             overfetch=overfetch)
+        if not self.sq8_escalate:
+            # approximate operating point: trust the rerank, never read
+            # the certificate back (no device sync on the hot path)
+            pass
+        elif bool(np.asarray(cert).all()):         # device sync
+            self.sq8_stats["certified"] += 1
+            self._sq8_bad_streak = 0
+        else:
+            # quantization noise could have pushed a true top-k candidate
+            # out of the over-fetched set: redo the whole batch exactly
+            v, g = ops.topk_segmented_desc(
+                dev["vectors"], dev["base_ids"], dev["deleted"],
+                queries[q_rows], q_owner, dstarts, dlens, downers,
+                tres_i, tres_ow, tship_i, rows, tship_ow, k,
+                metric=self.metric, accum=self.accum)
+            self.sq8_stats["escalations"] += 1
+            self._sq8_bad_streak += 1
+        self.wave_times["launch_ms"] += (time.perf_counter() - t0) * 1e3
         li = len(launches)
         launches.append((v, g))
         for row, r in enumerate(q_rows):

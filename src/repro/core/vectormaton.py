@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import queue as queue_mod
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -67,7 +68,12 @@ class VectorMatonConfig:
     skip_build: bool = True      # skip-build strategy (ablation switch)
     seed: int = 0
     backend: str = "numpy"       # 'numpy' host path | 'jax' device path
-    quantize: str = "none"       # 'sq8': int8 scan + fp32 rerank raw path
+    # 'sq8' (default): int8 scan + certified fp32 rerank on the jax scan
+    # path — provably equal to the fp32 scan (batches whose certificate
+    # fails escalate to it); 'none': fp32 scan only.  Ineligible shapes
+    # (see kernels.quant.sq8_supported) fall back to fp32 transparently.
+    quantize: str = "sq8"
+    accum: str = "f32"           # 'bf16': bf16 MXU operands, f32 accum
     # write path (DESIGN.md §4): fold the delta into a fresh generation
     # once it holds max(compact_min_inserts, compact_ratio · |base|)
     # inserts; auto_compact=False leaves compaction to explicit compact()
@@ -330,8 +336,10 @@ class VectorMaton:
         runtime snapshot, so a mid-batch compaction swap cannot mix
         generations."""
         rt = self.snapshot()
-        return rt.execute(queries, self.plan(patterns, rt), k,
-                          ef_search=ef_search)
+        t0 = time.perf_counter()
+        plan = self.plan(patterns, rt)
+        rt.wave_times["plan_ms"] += (time.perf_counter() - t0) * 1e3
+        return rt.execute(queries, plan, k, ef_search=ef_search)
 
     # ------------------------------------------------------------------ #
     # maintenance (paper §5)
@@ -515,6 +523,14 @@ class VectorMaton:
         if rt is not None:
             for key, val in rt.traffic.items():
                 out[f"traffic_{key}"] = val
+            # SQ8 scan-path accounting (certified vs escalated vs
+            # fell-back batches) and the per-wave wall-clock breakdown.
+            # Launch time is trace+dispatch (device dispatch is async);
+            # the merge wave absorbs the device sync.
+            for key, val in rt.sq8_stats.items():
+                out[f"sq8_{key}"] = val
+            for key, val in rt.wave_times.items():
+                out[f"time_{key}"] = val
         return out
 
     def _promote(self, raw_ids: np.ndarray, u: int) -> _StateIndex:

@@ -95,6 +95,102 @@ def make_corpus(name: str, seed: int = 0, scale: float = 1.0
     return vecs, seqs
 
 
+# --------------------------------------------------------------------- #
+# real-scale streamed corpus (BENCH_PR6, DESIGN.md §6)
+#
+# The paper-shape corpora above top out at a few thousand records; the
+# scalability frontier needs 10^5–10^6 vectors at 128–768 dims without
+# blowing CI memory at generation time.  Vectors stream out in fixed
+# blocks, each regenerable independently from (seed, block index), so
+# an oracle scan can re-derive any block without holding the table.
+#
+# Pattern structure is synthetic-but-exact: record i carries tag
+# character t_j iff
+#
+#     ((i · 2654435761 + j · 0x9E3779B9) mod 2^32)  <  s_j · 2^32
+#
+# (Knuth multiplicative hash), giving each tag an exact, id-decidable
+# selectivity s_j.  A record's sequence is its present tags in a fixed
+# order plus a terminal 'z', so substring membership (what the ESAM
+# indexes) is decidable per id and pattern selectivities compose:
+# "ab" ≈ s_a·s_b, "e" stays rare, "az" means "a and nothing between".
+# --------------------------------------------------------------------- #
+
+SCALE_TAGS: List[Tuple[str, float]] = [
+    ("a", 0.50), ("b", 0.25), ("c", 0.10), ("d", 0.04), ("e", 0.01)]
+# frontier query mix: selectivities ~0.5 .. ~0.01 via tag composition
+SCALE_PATTERNS = ["a", "b", "c", "d", "e", "ab", "bc", "cz"]
+_KNUTH = np.uint64(2654435761)
+_PHI32 = np.uint64(0x9E3779B9)
+_MASK32 = np.uint64(0xFFFFFFFF)
+SCALE_BLOCK = 8192
+
+
+def _mix32(x: np.ndarray) -> np.ndarray:
+    """Avalanche finish (murmur3-style): without it the per-tag offsets
+    stay linearly correlated and composed patterns like "bc" get
+    selectivity 0 instead of s_b·s_c."""
+    x = x & _MASK32
+    x ^= x >> np.uint64(16)
+    x = (x * np.uint64(0x7FEB352D)) & _MASK32
+    x ^= x >> np.uint64(15)
+    x = (x * np.uint64(0x846CA68B)) & _MASK32
+    return x ^ (x >> np.uint64(16))
+
+
+def scale_tag_member(ids: np.ndarray, tag_index: int,
+                     selectivity: float) -> np.ndarray:
+    """Exact per-id tag membership under the Knuth-hash rule."""
+    h = _mix32(ids.astype(np.uint64) * _KNUTH
+               + np.uint64(tag_index) * _PHI32)
+    return h < np.uint64(int(selectivity * 2 ** 32))
+
+
+def scale_sequences(n: int) -> List[str]:
+    """Tag strings for ids 0..n-1 (deterministic, seed-free)."""
+    ids = np.arange(n, dtype=np.uint64)
+    members = [scale_tag_member(ids, j, s)
+               for j, (_, s) in enumerate(SCALE_TAGS)]
+    tags = [t for t, _ in SCALE_TAGS]
+    return ["".join(t for t, m in zip(tags, row) if m) + "z"
+            for row in zip(*(m.tolist() for m in members))]
+
+
+def _scale_centers(dim: int, seed: int,
+                   n_centers: int = 256) -> np.ndarray:
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0xC5]))
+    return rng.standard_normal((n_centers, dim)).astype(np.float32)
+
+
+def stream_scale_vectors(n: int, dim: int, seed: int = 0,
+                         block: int = SCALE_BLOCK):
+    """Yield ``(start, (b, dim) float32)`` blocks of the scale corpus.
+
+    Block b depends only on ``(seed, b)`` — cluster assignment is the
+    same Knuth hash over ids — so a streamed consumer (oracle scan,
+    sharded loader) regenerates any block in O(block·dim) memory."""
+    centers = _scale_centers(dim, seed)
+    for start in range(0, n, block):
+        stop = min(n, start + block)
+        ids = np.arange(start, stop, dtype=np.uint64)
+        assign = ((ids * _KNUTH + 7 * _PHI32) & _MASK32) % len(centers)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([seed, 1 + start // block]))
+        noise = rng.standard_normal((stop - start, dim)).astype(np.float32)
+        yield start, centers[assign.astype(np.int64)] + 0.5 * noise
+
+
+def make_scale_corpus(n: int, dim: int, seed: int = 0
+                      ) -> Tuple[np.ndarray, List[str]]:
+    """Materialized (vectors, sequences) — the index build needs the
+    full table resident anyway; callers that only scan should iterate
+    ``stream_scale_vectors`` instead."""
+    vecs = np.empty((n, dim), np.float32)
+    for start, blk in stream_scale_vectors(n, dim, seed):
+        vecs[start:start + len(blk)] = blk
+    return vecs, scale_sequences(n)
+
+
 def sample_patterns(seqs: List[str], length: int, count: int,
                     seed: int = 0) -> List[str]:
     """Query patterns sampled from substrings that actually occur

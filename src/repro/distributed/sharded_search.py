@@ -155,6 +155,23 @@ class ShardedDeviceIndex:
         self.deleted = jax.device_put(jnp.asarray(dmask),
                                       NamedSharding(mesh, P(axis)))
         self._del_seen = set(runtime.deleted)
+        # resident int8 table (codes, scale, sqnorm, code-L1), sharded
+        # like the fp32 rows: the SQ8 sweep gathers these per candidate
+        # and only touches fp32 rows for the (Q, kq) rerank gather.  Pad
+        # rows quantize to all-zero codes and are owner-masked anyway.
+        self.quant = None
+        if getattr(runtime, "quantize", "none") == "sq8":
+            scale = (np.abs(vec).max(axis=1, keepdims=True)
+                     .astype(np.float32) / 127.0 + 1e-12)
+            codes = np.clip(np.rint(vec / scale), -127,
+                            127).astype(np.int8)
+            sqn = (vec * vec).sum(axis=1, keepdims=True,
+                                  dtype=np.float32)
+            l1 = np.abs(codes.astype(np.int32)).sum(
+                axis=1, keepdims=True).astype(np.float32)
+            self.quant = tuple(
+                jax.device_put(jnp.asarray(a), row_spec)
+                for a in (codes, scale.astype(np.float32), sqn, l1))
         # ---- shard-local CSR: per state, the segment's ids re-grouped by
         # owning shard and rebased to local row indices.  A chain cover on
         # shard s is then the descriptor (csr_ptr[s][u], length) per chain
@@ -377,6 +394,101 @@ def _sweep_fn(mesh: Mesh, axis: str, n_desc: int, k: int, metric: str,
     return jax.jit(fn)
 
 
+@functools.lru_cache(maxsize=128)
+def _sweep_fn_sq8(mesh: Mesh, axis: str, n_desc: int, k: int, kq: int,
+                  metric: str, local_n: int):
+    """Quantized twin of ``_sweep_fn``: each shard scans its int8 table
+    for the top-kq quantized candidates, reranks ONLY those kq rows in
+    fp32 (exact, GEMM form), and evaluates the per-shard exactness
+    certificate (``kernels.quant`` module docstring).  The third output
+    is the batch-global count of uncertified query rows (psum-reduced):
+    zero means the merged result provably equals the fp32 sweep's; the
+    caller escalates otherwise.  HBM candidate traffic drops from
+    ``nc·d·4`` to ``nc·d + kq·d·4`` bytes per shard."""
+    from ..kernels.distance_topk import expand_descriptors
+    from ..kernels.quant import _sq8_dense_segmented, quantize_sq8_ext
+    from ..kernels import ops
+
+    def local(q, qseg, dstart, dlen, downer, tails, towner, vq, vsc, vsq,
+              vl1, vecs, dele, csr):
+        parts_c, parts_o = [], []
+        if n_desc:
+            cand_d, own_d = expand_descriptors(
+                csr[0], dstart[0], dlen[0], downer, n_desc)
+            parts_c.append(cand_d)
+            parts_o.append(own_d)
+        if int(tails.shape[1]):
+            t1 = tails[0]
+            parts_c.append(jnp.maximum(t1, 0))
+            parts_o.append(jnp.where(t1 >= 0, towner, -3))
+        cand = (jnp.concatenate(parts_c) if len(parts_c) > 1
+                else parts_c[0])
+        own = (jnp.concatenate(parts_o) if len(parts_o) > 1
+               else parts_o[0])
+        own = jnp.where(dele[cand], -3, own)
+        nc = int(cand.shape[0])
+        qp, d_dim = int(q.shape[0]), int(q.shape[1])
+
+        xq, sx, x2, xl1 = quantize_sq8_ext(q)
+        yq, sy, y2, yl1 = vq[cand], vsc[cand], vsq[cand], vl1[cand]
+        kqe = min(kq, nc)
+        vals_q, idx = _sq8_dense_segmented(xq, sx, x2, yq, sy, y2,
+                                           qseg, own, kqe)
+        # exact fp32 rerank of the shard-local winners only
+        idxc = jnp.clip(idx, 0, nc - 1)
+        rows = vecs[cand[idxc]]                       # (Q, kqe, d) fp32
+        qf = q.astype(f32)
+        xy = jnp.einsum("qd,qkd->qk", qf, rows,
+                        preferred_element_type=f32)
+        c2 = jnp.sum(rows * rows, axis=-1)
+        x2r = jnp.sum(qf * qf, axis=-1, keepdims=True)
+        d2 = jnp.maximum(x2r + c2 - 2.0 * xy, 0.0)
+        d2 = jnp.where(idx >= 0, d2, jnp.inf)
+        ke = min(k, kqe)
+        neg, pos = jax.lax.top_k(-d2, ke)
+        fidx = jnp.take_along_axis(idx, pos, axis=1)
+        vals = jnp.where(fidx >= 0, -neg, jnp.inf)
+        shard_id = jax.lax.axis_index(axis)
+        gid = jnp.where(
+            fidx >= 0,
+            shard_id * local_n + cand[jnp.clip(fidx, 0, nc - 1)], -1)
+        if ke < k:
+            vals = jnp.pad(vals, ((0, 0), (0, k - ke)),
+                           constant_values=jnp.inf)
+            gid = jnp.pad(gid, ((0, 0), (0, k - ke)),
+                          constant_values=-1)
+
+        if nc <= kq:
+            # every shard-local candidate was reranked exactly
+            cert = jnp.ones((qp,), bool)
+        else:
+            live = own >= 0
+            ow = jnp.clip(own, 0, qp - 1)
+            u = jnp.where(live, sy[:, 0], 0.0)
+            t = jnp.where(live, sy[:, 0] * (yl1[:, 0] + d_dim / 2.0),
+                          0.0)
+            umax = jnp.zeros((qp,), f32).at[ow].max(u)
+            tmax = jnp.zeros((qp,), f32).at[ow].max(t)
+            oq = jnp.clip(qseg, 0, qp - 1)
+            eps = sx[:, 0] * (xl1[:, 0] * umax[oq] + tmax[oq])
+            qkq = vals_q[:, -1]
+            dk = vals[:, k - 1]
+            margin = eps + 1e-5 * (jnp.abs(qkq) + jnp.abs(dk)) + 1e-12
+            cert = jnp.isposinf(qkq) | (dk < qkq - margin)
+        mv, mi = ops.merge_topk_allgather(vals, gid, axis, k)
+        bad = jax.lax.psum(jnp.sum((~cert).astype(jnp.int32)), axis)
+        return mv, mi, bad
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(), P(axis, None), P(axis, None), P(),
+                  P(axis, None), P(), P(axis, None), P(axis, None),
+                  P(axis, None), P(axis, None), P(axis, None), P(axis),
+                  P(axis, None)),
+        out_specs=(P(), P(), P()), check_rep=False)
+    return jax.jit(fn)
+
+
 # ===================================================================== #
 # plan executor
 # ===================================================================== #
@@ -536,21 +648,51 @@ def sharded_plan_topk(mesh: Mesh, base, runtime, queries, plan, k: int, *,
 
     vals = gids = None
     if q_rows and n_desc + t_pad > 0:
+        from ..kernels.quant import sq8_supported
         q_n = len(q_rows)
         q_pad = ops.bucket(q_n, 8)
         qmat = np.zeros((q_pad, d_dim), np.float32)
         qmat[:q_n] = queries_np[q_rows]
         qseg = np.full(q_pad, -1, np.int32)
         qseg[:q_n] = q_owner
-        fn = _sweep_fn(mesh, axis, n_desc, k, metric, sh.local_n)
-        dv, gv = fn(jnp.asarray(qmat), jnp.asarray(qseg),
-                    jnp.asarray(dstart_np), jnp.asarray(dlen_np),
-                    jnp.asarray(downer_np), tails_dev,
-                    jnp.asarray(towner_np), sh.vectors, sh.deleted,
-                    sh.csr_local)
         key = (q_pad, n_desc, d_pad, t_pad, k, metric, sh.shards,
                sh.local_n, d_dim)
-        ops.record_launch("sharded_sweep", key)
+        fp32_args = (jnp.asarray(qmat), jnp.asarray(qseg),
+                     jnp.asarray(dstart_np), jnp.asarray(dlen_np),
+                     jnp.asarray(downer_np), tails_dev,
+                     jnp.asarray(towner_np), sh.vectors, sh.deleted,
+                     sh.csr_local)
+        dv = gv = None
+        streak_out = (getattr(runtime, "sq8_escalate", True)
+                      and getattr(runtime, "_sq8_bad_streak", 0)
+                      >= getattr(runtime, "SQ8_MAX_STREAK", 3))
+        if (sh.quant is not None and not streak_out
+                and sq8_supported(k, d_dim, metric)):
+            # quantized sweep + per-shard certificate; a failed batch
+            # escalates to the fp32 sweep below (exactness contract),
+            # and a streak of failures flips the runtime to fp32
+            # outright (same adaptive policy as the single-chip path)
+            kq = min(128, max(k, k * max(1, min(4, 128 // max(k, 1)))))
+            fn = _sweep_fn_sq8(mesh, axis, n_desc, k, kq, metric,
+                               sh.local_n)
+            dv, gv, bad = fn(*fp32_args[:7], *sh.quant, *fp32_args[7:])
+            ops.record_launch("sq8_sharded_sweep", key + (kq,))
+            runtime.sq8_stats["batches"] += 1
+            if not getattr(runtime, "sq8_escalate", True):
+                pass          # approximate point: trust the rerank
+            elif int(bad):
+                runtime.sq8_stats["escalations"] += 1
+                runtime._sq8_bad_streak += 1
+                dv = gv = None
+            else:
+                runtime.sq8_stats["certified"] += 1
+                runtime._sq8_bad_streak = 0
+        elif sh.quant is not None:
+            runtime.sq8_stats["fallbacks"] += 1
+        if dv is None:
+            fn = _sweep_fn(mesh, axis, n_desc, k, metric, sh.local_n)
+            dv, gv = fn(*fp32_args)
+            ops.record_launch("sharded_sweep", key)
         desc_bytes = sh.shards * d_pad * 8 + d_pad * 4 + t_pad * 4
         tf["shard_descriptor_bytes"] += desc_bytes
         tf["shard_query_bytes"] += q_pad * (d_dim * 4 + 4)

@@ -36,9 +36,32 @@ BLOCK_Q = 128
 BLOCK_N = 128
 
 
+def _dist_tile(x, y, metric: str, accum: str):
+    """(bq, d) × (bn, d) -> (bq, bn) distance tile.  ``accum="bf16"``
+    rounds the operands to bf16 before the MXU contraction (half the
+    VMEM, double the MXU rate) but keeps the accumulator and the norm
+    epilogue in f32 — the bf16-accumulation contract DESIGN.md §6
+    specifies and the tolerance tests bound."""
+    if accum == "bf16":
+        x = x.astype(jnp.bfloat16)
+        y = y.astype(jnp.bfloat16)
+    else:
+        x = x.astype(jnp.float32)
+        y = y.astype(jnp.float32)
+    xy = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    if metric == "l2":
+        xf = x.astype(jnp.float32)
+        yf = y.astype(jnp.float32)
+        x2 = jnp.sum(xf * xf, axis=-1, keepdims=True)
+        y2 = jnp.sum(yf * yf, axis=-1)[None, :]
+        return jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)   # (bq, bn)
+    return -xy
+
+
 def _topk_kernel(x_ref, y_ref, val_out_ref, idx_out_ref,
                  val_scr, idx_scr, *, metric: str, k: int, block_n: int,
-                 n_blocks: int, valid_n: int):
+                 n_blocks: int, valid_n: int, accum: str):
     j = pl.program_id(1)
 
     # --- reset the running top-k at the start of each query row ------------
@@ -47,16 +70,7 @@ def _topk_kernel(x_ref, y_ref, val_out_ref, idx_out_ref,
         val_scr[...] = jnp.full_like(val_scr, jnp.inf)
         idx_scr[...] = jnp.full_like(idx_scr, -1)
 
-    x = x_ref[...].astype(jnp.float32)            # (bq, d)
-    y = y_ref[...].astype(jnp.float32)            # (bn, d)
-    xy = jax.lax.dot_general(
-        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    if metric == "l2":
-        x2 = jnp.sum(x * x, axis=-1, keepdims=True)
-        y2 = jnp.sum(y * y, axis=-1)[None, :]
-        dist = jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)   # (bq, bn)
-    else:
-        dist = -xy
+    dist = _dist_tile(x_ref[...], y_ref[...], metric, accum)
 
     base = j * block_n
     col_idx = base + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
@@ -82,7 +96,7 @@ def _topk_kernel(x_ref, y_ref, val_out_ref, idx_out_ref,
 
 def _topk_seg_kernel(x_ref, y_ref, qseg_ref, cseg_ref, val_out_ref,
                      idx_out_ref, val_scr, idx_scr, *, metric: str, k: int,
-                     block_n: int, n_blocks: int, valid_n: int):
+                     block_n: int, n_blocks: int, valid_n: int, accum: str):
     """Segmented variant: row r may only take candidates c with
     cseg[c] == qseg[r], so one launch serves many (query, id-set) pairs."""
     j = pl.program_id(1)
@@ -92,16 +106,7 @@ def _topk_seg_kernel(x_ref, y_ref, qseg_ref, cseg_ref, val_out_ref,
         val_scr[...] = jnp.full_like(val_scr, jnp.inf)
         idx_scr[...] = jnp.full_like(idx_scr, -1)
 
-    x = x_ref[...].astype(jnp.float32)            # (bq, d)
-    y = y_ref[...].astype(jnp.float32)            # (bn, d)
-    xy = jax.lax.dot_general(
-        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    if metric == "l2":
-        x2 = jnp.sum(x * x, axis=-1, keepdims=True)
-        y2 = jnp.sum(y * y, axis=-1)[None, :]
-        dist = jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)   # (bq, bn)
-    else:
-        dist = -xy
+    dist = _dist_tile(x_ref[...], y_ref[...], metric, accum)
 
     base = j * block_n
     col_idx = base + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
@@ -126,7 +131,7 @@ def _topk_seg_kernel(x_ref, y_ref, qseg_ref, cseg_ref, val_out_ref,
 
 
 def _seg_pallas_call(x, y, qseg, cseg, k, *, metric, block_q, block_n,
-                     interpret, valid_n):
+                     interpret, valid_n, accum="f32"):
     """Shared pallas_call plumbing for the segmented kernel — used by the
     host-materialized path (``distance_topk_segmented``) and the
     descriptor-resolved path (``distance_topk_descriptors``)."""
@@ -141,7 +146,7 @@ def _seg_pallas_call(x, y, qseg, cseg, k, *, metric, block_q, block_n,
     grid = (q // block_q, n_blocks)
     kernel = functools.partial(_topk_seg_kernel, metric=metric, k=k,
                                block_n=block_n, n_blocks=n_blocks,
-                               valid_n=valid_n)
+                               valid_n=valid_n, accum=accum)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -169,12 +174,13 @@ def _seg_pallas_call(x, y, qseg, cseg, k, *, metric, block_q, block_n,
 
 @functools.partial(jax.jit, static_argnames=("k", "metric", "block_q",
                                              "block_n", "interpret",
-                                             "valid_n"))
+                                             "valid_n", "accum"))
 def distance_topk_segmented(x: jax.Array, y: jax.Array, qseg: jax.Array,
                             cseg: jax.Array, k: int, *, metric: str = "l2",
                             block_q: int = BLOCK_Q, block_n: int = BLOCK_N,
                             interpret: bool = False,
-                            valid_n: int | None = None):
+                            valid_n: int | None = None,
+                            accum: str = "f32"):
     """Segmented exact top-k.  x: (Q, d) queries, y: (N, d) concatenated
     candidate segments, qseg: (Q, 1) owner id per query row, cseg: (1, N)
     owner id per candidate row.  A candidate is eligible for a query iff the
@@ -185,7 +191,8 @@ def distance_topk_segmented(x: jax.Array, y: jax.Array, qseg: jax.Array,
     """
     return _seg_pallas_call(x, y, qseg, cseg, k, metric=metric,
                             block_q=block_q, block_n=block_n,
-                            interpret=interpret, valid_n=valid_n)
+                            interpret=interpret, valid_n=valid_n,
+                            accum=accum)
 
 
 # --------------------------------------------------------------------- #
@@ -220,7 +227,7 @@ def expand_descriptors(base_ids: jax.Array, starts: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("k", "n_desc", "metric",
                                              "block_q", "block_n",
-                                             "interpret"))
+                                             "interpret", "accum", "impl"))
 def distance_topk_descriptors(vectors: jax.Array, base_ids: jax.Array,
                               deleted: jax.Array, x: jax.Array,
                               qseg: jax.Array, starts: jax.Array,
@@ -233,7 +240,8 @@ def distance_topk_descriptors(vectors: jax.Array, base_ids: jax.Array,
                               n_desc: int, metric: str = "l2",
                               block_q: int = BLOCK_Q,
                               block_n: int = BLOCK_N,
-                              interpret: bool = False):
+                              interpret: bool = False,
+                              accum: str = "f32", impl: str = "pallas"):
     """Segmented top-k whose candidate sets are *descriptors* into the
     device-resident CSR, not host-materialized id lists.
 
@@ -257,15 +265,26 @@ def distance_topk_descriptors(vectors: jax.Array, base_ids: jax.Array,
     Returns ``(vals, gids)`` of shape (Q, k): distances ascending and
     GLOBAL candidate ids (-1/+inf padding) — no flat-position indices
     escape, so callers never map back through a host candidate array.
+
+    ``impl="xla"`` swaps the Pallas core for the dense jnp segmented
+    sweep (``segmented_dense_topk``) — the XLA-compiled twin used where
+    Pallas cannot compile (this container's CPU backend); assembly,
+    gathers, and gid mapping are shared, so the two differ only in the
+    top-k schedule.
     """
     y, cseg, gid_flat = assemble_flat_candidates(
         vectors, base_ids, deleted, starts, lens, owners, tail_res_ids,
         tail_res_owners, tail_ship_ids, tail_ship_owners, tail_ship_rows,
         n_desc)
     n = int(y.shape[0])
-    vals, idx = _seg_pallas_call(
-        x, y, qseg, cseg.reshape(1, n), k, metric=metric, block_q=block_q,
-        block_n=block_n, interpret=interpret, valid_n=n)
+    if impl == "xla":
+        vals, idx = segmented_dense_topk(x, y, qseg[:, 0], cseg, k,
+                                         metric=metric)
+    else:
+        vals, idx = _seg_pallas_call(
+            x, y, qseg, cseg.reshape(1, n), k, metric=metric,
+            block_q=block_q, block_n=block_n, interpret=interpret,
+            valid_n=n, accum=accum)
     gids = jnp.where(idx >= 0, gid_flat[jnp.clip(idx, 0, n - 1)], -1)
     return vals, gids
 
@@ -349,10 +368,11 @@ def segmented_dense_topk(x: jax.Array, y: jax.Array, qseg: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("k", "metric", "block_q",
                                              "block_n", "interpret",
-                                             "valid_n"))
+                                             "valid_n", "accum"))
 def distance_topk(x: jax.Array, y: jax.Array, k: int, *, metric: str = "l2",
                   block_q: int = BLOCK_Q, block_n: int = BLOCK_N,
-                  interpret: bool = False, valid_n: int | None = None):
+                  interpret: bool = False, valid_n: int | None = None,
+                  accum: str = "f32"):
     """Exact top-k over the base set.  x: (Q, d), y: (N, d).
 
     Returns (values, indices) of shape (Q, k); distances ascending.
@@ -370,7 +390,7 @@ def distance_topk(x: jax.Array, y: jax.Array, k: int, *, metric: str = "l2",
     grid = (q // block_q, n_blocks)
     kernel = functools.partial(_topk_kernel, metric=metric, k=k,
                                block_n=block_n, n_blocks=n_blocks,
-                               valid_n=valid_n)
+                               valid_n=valid_n, accum=accum)
     return pl.pallas_call(
         kernel,
         grid=grid,

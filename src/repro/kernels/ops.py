@@ -33,8 +33,9 @@ import numpy as np
 
 from . import ref
 from .distance_topk import (distance_topk, distance_topk_descriptors,
-                            distance_topk_segmented)
+                            distance_topk_segmented, segmented_dense_topk)
 from .pairwise import pairwise_distance
+from .tuning import default_impl, default_interpret, select_tiles
 
 _LANE = 128
 
@@ -122,19 +123,24 @@ def _round_up(n: int, mult: int) -> int:
 
 
 def pairwise_sqdist(x: jax.Array, y: jax.Array, *, metric: str = "l2",
-                    interpret: bool | None = None) -> jax.Array:
+                    interpret: bool | None = None,
+                    accum: str = "f32") -> jax.Array:
     """(Q, d) × (N, d) -> (Q, N) distances via the tiled Pallas kernel."""
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = default_interpret()
     q, n = x.shape[0], y.shape[0]
-    qp, np_ = _round_up(max(q, 1), _LANE), _round_up(max(n, 1), _LANE)
+    bq, bn = select_tiles(q, n, x.shape[1],
+                          itemsize=2 if accum == "bf16" else 4)
+    qp, np_ = _round_up(max(q, 1), bq), _round_up(max(n, 1), bn)
     out = pairwise_distance(_pad_to(x, qp), _pad_to(y, np_), metric=metric,
-                            interpret=interpret)
+                            block_q=bq, block_n=bn, interpret=interpret,
+                            accum=accum)
     return out[:q, :n]
 
 
 def topk(x: jax.Array, y: jax.Array, k: int, *, metric: str = "l2",
-         interpret: bool | None = None) -> Tuple[jax.Array, jax.Array]:
+         interpret: bool | None = None, accum: str = "f32"
+         ) -> Tuple[jax.Array, jax.Array]:
     """Exact top-k via the fused streaming kernel.
 
     Padded base rows are pushed to +inf so they can never be selected unless
@@ -142,16 +148,19 @@ def topk(x: jax.Array, y: jax.Array, k: int, *, metric: str = "l2",
     -1 as "no neighbour".
     """
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = default_interpret()
     q, n = x.shape[0], y.shape[0]
     kp = _round_up(k, 8)  # scratch lane alignment
     if kp > _LANE:
         raise ValueError(f"k={k} exceeds kernel max {_LANE}")
-    qp, np_ = _round_up(max(q, 1), _LANE), _round_up(max(n, 1), _LANE)
+    bq, bn = select_tiles(q, n, x.shape[1], k=kp,
+                          itemsize=2 if accum == "bf16" else 4)
+    qp, np_ = _round_up(max(q, 1), bq), _round_up(max(n, 1), bn)
     xpad = _pad_to(x, qp)
     ypad = _pad_to(y, np_)
     vals, idx = distance_topk(xpad, ypad, kp, metric=metric,
-                              interpret=interpret, valid_n=n)
+                              block_q=bq, block_n=bn,
+                              interpret=interpret, valid_n=n, accum=accum)
     vals, idx = vals[:q, :k], idx[:q, :k]
     # mask padded base rows
     invalid = idx >= n
@@ -162,7 +171,7 @@ def topk(x: jax.Array, y: jax.Array, k: int, *, metric: str = "l2",
 
 def topk_segmented(x: jax.Array, y: jax.Array, qseg: jax.Array,
                    cseg: jax.Array, k: int, *, metric: str = "l2",
-                   interpret: bool | None = None
+                   interpret: bool | None = None, accum: str = "f32"
                    ) -> Tuple[jax.Array, jax.Array]:
     """Segmented exact top-k: ONE kernel launch serving many (query, id-set)
     pairs.  ``qseg`` (Q,) assigns each query row an owner id; ``cseg`` (N,)
@@ -174,12 +183,14 @@ def topk_segmented(x: jax.Array, y: jax.Array, qseg: jax.Array,
     unfilled slots (segment smaller than k, or empty) are (+inf, -1).
     """
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = default_interpret()
     q, n = x.shape[0], y.shape[0]
     kp = _round_up(k, 8)
     if kp > _LANE:
         raise ValueError(f"k={k} exceeds kernel max {_LANE}")
-    qp, np_ = _round_up(max(q, 1), _LANE), _round_up(max(n, 1), _LANE)
+    bq, bn = select_tiles(q, n, x.shape[1], k=kp,
+                          itemsize=2 if accum == "bf16" else 4)
+    qp, np_ = _round_up(max(q, 1), bq), _round_up(max(n, 1), bn)
     qseg = jnp.asarray(qseg, jnp.int32)
     cseg = jnp.asarray(cseg, jnp.int32)
     # Padded query rows own segment -1, padded candidate rows -2: neither
@@ -188,7 +199,8 @@ def topk_segmented(x: jax.Array, y: jax.Array, qseg: jax.Array,
     cseg_p = jnp.full((1, np_), -2, jnp.int32).at[0, :n].set(cseg)
     vals, idx = distance_topk_segmented(
         _pad_to(x, qp), _pad_to(y, np_), qseg_p, cseg_p, kp, metric=metric,
-        interpret=interpret, valid_n=n)
+        block_q=bq, block_n=bn, interpret=interpret, valid_n=n,
+        accum=accum)
     vals, idx = vals[:q, :k], idx[:q, :k]
     invalid = (idx < 0) | ~jnp.isfinite(vals)
     vals = jnp.where(invalid, jnp.inf, vals)
@@ -206,7 +218,8 @@ def topk_segmented_desc(vectors: jax.Array, base_ids: jax.Array,
                         tail_ship_rows: np.ndarray,
                         tail_ship_owners: np.ndarray, k: int, *,
                         metric: str = "l2",
-                        interpret: bool | None = None
+                        interpret: bool | None = None,
+                        accum: str = "f32", impl: str | None = None
                         ) -> Tuple[jax.Array, jax.Array]:
     """Descriptor-driven segmented top-k: ONE launch serving many
     (query, id-set) pairs whose frozen-base candidates are ``(seg_start,
@@ -224,7 +237,9 @@ def topk_segmented_desc(vectors: jax.Array, base_ids: jax.Array,
     distances + global candidate ids, (+inf, -1) padding.
     """
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = default_interpret()
+    if impl is None:
+        impl = default_impl()
     q = x.shape[0]
     kp = _round_up(k, 8)
     if kp > _LANE:
@@ -232,11 +247,17 @@ def topk_segmented_desc(vectors: jax.Array, base_ids: jax.Array,
     args, key = pad_descriptor_batch(
         x, qseg, desc_starts, desc_lens, desc_owners, tail_res_ids,
         tail_res_owners, tail_ship_ids, tail_ship_rows, tail_ship_owners)
-    n_desc = key[1]
+    qp, n_desc, tr, ts, _, d = key
+    # the flat candidate extent is fixed by the pre-bucketed regions, so
+    # block_n must divide it; block_q likewise divides the padded Q
+    bq, bn = select_tiles(qp, n_desc + tr + ts, d, k=kp,
+                          itemsize=2 if accum == "bf16" else 4,
+                          divisor_n=max(n_desc + tr + ts, _LANE))
     vals, gids = distance_topk_descriptors(
         vectors, base_ids, deleted, *args, kp, n_desc=n_desc,
-        metric=metric, interpret=interpret)
-    record_launch("desc_scan", key + (kp, metric))
+        metric=metric, block_q=min(bq, qp), block_n=bn,
+        interpret=interpret, accum=accum, impl=impl)
+    record_launch("desc_scan", key + (kp, metric, impl))
     vals, gids = vals[:q, :k], gids[:q, :k]
     bad = (gids < 0) | ~jnp.isfinite(vals)
     return jnp.where(bad, jnp.inf, vals), jnp.where(bad, -1, gids)
@@ -281,6 +302,57 @@ def pad_descriptor_batch(x, qseg, desc_starts, desc_lens, desc_owners,
             jnp.asarray(_pad1(tail_ship_owners, ts, -3)),
             jnp.asarray(rows))
     return args, (qp, n_desc, tr, ts, dp, d)
+
+
+# --------------------------------------------------------------------- #
+# XLA-compiled twins: the non-interpret path off-TPU.  Pallas lowers
+# natively only on TPU; everywhere else these jnp twins are what
+# "compiled kernels" means — one XLA executable per shape bucket, MXU/
+# AVX matmul + lax.top_k, the same output contract as the Pallas
+# wrappers.  BENCH_PR6.json's frontier runs on these (DESIGN.md §6).
+# --------------------------------------------------------------------- #
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def _topk_dense_xla(x, y, k: int, metric: str):
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    xy = jax.lax.dot_general(xf, yf, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    if metric == "l2":
+        x2 = jnp.sum(xf * xf, axis=-1, keepdims=True)
+        y2 = jnp.sum(yf * yf, axis=-1)[None, :]
+        dist = jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)
+    else:
+        dist = -xy
+    neg, idx = jax.lax.top_k(-dist, k)
+    return -neg, idx
+
+
+def topk_xla(x: jax.Array, y: jax.Array, k: int, *, metric: str = "l2"
+             ) -> Tuple[jax.Array, jax.Array]:
+    """XLA-compiled dense top-k twin of ``topk`` (same sentinel contract:
+    trailing (+inf, -1) when k > N)."""
+    q, n = x.shape[0], y.shape[0]
+    kk = min(k, n)
+    vals, idx = _topk_dense_xla(x, y, kk, metric)
+    if kk < k:
+        vals = jnp.pad(vals, ((0, 0), (0, k - kk)),
+                       constant_values=jnp.inf)
+        idx = jnp.pad(idx, ((0, 0), (0, k - kk)), constant_values=-1)
+    return vals, idx
+
+
+_topk_segmented_xla_jit = jax.jit(segmented_dense_topk,
+                                  static_argnames=("k", "metric"))
+
+
+def topk_segmented_xla(x: jax.Array, y: jax.Array, qseg, cseg, k: int, *,
+                       metric: str = "l2") -> Tuple[jax.Array, jax.Array]:
+    """XLA-compiled twin of ``topk_segmented`` (dense segmented sweep —
+    the same core the sharded executor runs inside ``shard_map``)."""
+    return _topk_segmented_xla_jit(x, y, jnp.asarray(qseg, jnp.int32),
+                                   jnp.asarray(cseg, jnp.int32), k,
+                                   metric=metric)
 
 
 # --------------------------------------------------------------------- #
@@ -419,7 +491,9 @@ def merge_topk_allgather(vals: jax.Array, gids: jax.Array, axis: str,
 
 
 __all__ = ["pairwise_sqdist", "topk", "topk_segmented",
-           "topk_segmented_desc", "topk_segmented_numpy", "topk_numpy",
+           "topk_segmented_desc", "topk_xla", "topk_segmented_xla",
+           "segmented_dense_topk", "topk_segmented_numpy", "topk_numpy",
            "merge_topk_device", "merge_topk_allgather", "bucket",
+           "default_interpret", "default_impl", "select_tiles",
            "launch_stats", "reset_launch_stats", "record_launch",
            "jit_cache_sizes", "ref"]

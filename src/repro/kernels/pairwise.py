@@ -25,26 +25,21 @@ BLOCK_Q = 128
 BLOCK_N = 128
 
 
-def _pairwise_kernel(x_ref, y_ref, out_ref, *, metric: str):
-    x = x_ref[...].astype(jnp.float32)          # (bq, d)
-    y = y_ref[...].astype(jnp.float32)          # (bn, d)
-    # MXU path: contraction in f32 with preferred_element_type pinned so the
-    # accumulator never drops precision.
-    xy = jax.lax.dot_general(
-        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    if metric == "l2":
-        x2 = jnp.sum(x * x, axis=-1, keepdims=True)     # (bq, 1)
-        y2 = jnp.sum(y * y, axis=-1)[None, :]           # (1, bn)
-        out_ref[...] = jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)
-    else:  # negative inner product
-        out_ref[...] = -xy
+def _pairwise_kernel(x_ref, y_ref, out_ref, *, metric: str, accum: str):
+    # MXU path: contraction with preferred_element_type pinned to f32 so
+    # the accumulator never drops precision; accum="bf16" rounds the
+    # operands (half the VMEM, double the MXU rate), accum="f32" keeps
+    # them full precision.
+    from .distance_topk import _dist_tile
+    out_ref[...] = _dist_tile(x_ref[...], y_ref[...], metric, accum)
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "block_q", "block_n",
-                                             "interpret"))
+                                             "interpret", "accum"))
 def pairwise_distance(x: jax.Array, y: jax.Array, *, metric: str = "l2",
                       block_q: int = BLOCK_Q, block_n: int = BLOCK_N,
-                      interpret: bool = False) -> jax.Array:
+                      interpret: bool = False,
+                      accum: str = "f32") -> jax.Array:
     """(Q, d) × (N, d) -> (Q, N) float32 distances.
 
     Q and N must be multiples of the block sizes (ops.py handles padding).
@@ -55,7 +50,7 @@ def pairwise_distance(x: jax.Array, y: jax.Array, *, metric: str = "l2",
     assert q % block_q == 0 and n % block_n == 0, (q, n, block_q, block_n)
     grid = (q // block_q, n // block_n)
     return pl.pallas_call(
-        functools.partial(_pairwise_kernel, metric=metric),
+        functools.partial(_pairwise_kernel, metric=metric, accum=accum),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),

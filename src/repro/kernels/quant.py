@@ -2,15 +2,30 @@
 
 Scalar quantization (per-vector symmetric int8) halves-to-quarters the HBM
 bytes of the brute-force scan — the binding term of the search roofline
-once the fused kernel removes the distance-matrix round-trip.  Recall is
-restored by an fp32 rerank of an over-fetched candidate set (standard
-vector-DB practice; the paper's index stores raw fp32 and is purely
-memory-bound at large N).
+once the fused kernel removes the distance-matrix round-trip.  Exactness is
+restored by an fp32 rerank of an over-fetched candidate set plus a
+per-batch **certificate** (below); the paper's index stores raw fp32 and is
+purely memory-bound at large N.
 
 Distance identity used (L2):
     ‖x−y‖² = ‖x‖² + ‖y‖² − 2·sx·sy·(x_q·y_q)
-with x_q,y_q int8 and the int32 MXU dot; ‖·‖² kept fp32 exactly, so the
-only approximation error is the cross-term quantization noise.
+with x_q,y_q int8 and the int32 MXU dot (exact for d ≤ 2^15: |dot| ≤
+d·127² < 2³¹); ‖·‖² kept fp32 exactly, so the only approximation error is
+the cross-term quantization noise.
+
+Exactness certificate (DESIGN.md §6): with x = sx·x_q + e_x, |e_x,i| ≤
+sx/2 (symmetric rounding, no clipping by construction of the scale), the
+quantized estimate D̂ satisfies
+
+    |D − D̂| ≤ ε(x,c) = sx·sy_c·(‖x_q‖₁ + ‖y_q,c‖₁ + d/2).
+
+The scan keeps the top-kq by D̂; any excluded candidate therefore has
+D ≥ D̂ − ε ≥ q_kq − ε_max, where q_kq is the kq-th kept quantized distance
+and ε_max bounds ε over the query's live candidates.  If the k-th exact
+reranked distance D_k < q_kq − ε_max, no excluded candidate can beat the
+reranked winners and the batch's result equals the fp32 scan's.  Otherwise
+the executor escalates the batch to the fp32 descriptor path — so
+``quantize="sq8"`` is a pure bandwidth optimisation, never a recall trade.
 """
 
 from __future__ import annotations
@@ -24,10 +39,26 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .tuning import (SQ8_DIM_CAP, default_impl, default_interpret,
+                     select_tiles)
+
 f32 = jnp.float32
 
 BLOCK_Q = 128
 BLOCK_N = 128
+
+# Above this k the overfetch factor (128-lane scratch / k) drops below 2
+# and the quantized scan stops paying for its rerank tail.
+SQ8_MAX_K = 64
+
+
+def sq8_supported(k: int, dim: int, metric: str = "l2") -> bool:
+    """Eligibility gate for the SQ8 scan path.  The executor falls back to
+    the fp32 scan (recording the reason in ``sq8_stats``) rather than
+    raising: L2 only (the certificate bound is an L2 identity), dim within
+    the int8 tile budget, and k small enough that the 128-lane scratch
+    still buys an overfetch factor ≥ 2."""
+    return metric == "l2" and int(dim) <= SQ8_DIM_CAP and int(k) <= SQ8_MAX_K
 
 
 def quantize_sq8(x: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -38,6 +69,18 @@ def quantize_sq8(x: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
     q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
     sq = jnp.sum(xf * xf, axis=1, keepdims=True)
     return q, scale, sq
+
+
+def quantize_sq8_ext(x: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """``quantize_sq8`` plus the L1 norm of the QUANTIZED codes
+    (f32 (rows,1)) — the per-vector term of the certificate bound.  This is
+    what ``PackedRuntime.to_device`` stores as the resident quantized
+    table."""
+    q, scale, sq = quantize_sq8(x)
+    l1 = jnp.sum(jnp.abs(q.astype(jnp.int32)), axis=1,
+                 keepdims=True).astype(f32)
+    return q, scale, sq, l1
 
 
 def _qtopk_kernel(xq_ref, sx_ref, x2_ref, yq_ref, sy_ref, y2_ref,
@@ -203,55 +246,166 @@ def _quantized_topk_segmented(xq, sx, x2, yq, sy, y2, qseg, cseg, k: int, *,
     )(xq, sx, x2, yq, sy, y2, qseg, cseg)
 
 
+def _sq8_dense_segmented(xq, sx, x2, yq, sy, y2, qseg_vec, cseg, k: int):
+    """XLA twin of the segmented int8 scan: one code-matrix matmul +
+    ``lax.top_k``, mirroring ``segmented_dense_topk`` for the quantized
+    estimate.  The compiled path off-TPU.
+
+    For d ≤ 1024 the int8×int8 dot runs as an f32 GEMM of the code
+    matrices — every partial sum is an integer bounded by d·127² < 2²⁴,
+    which f32 represents exactly, so the result is bit-identical to the
+    int32 dot while hitting the BLAS/MXU fp32 path instead of XLA's slow
+    scalar int32 matmul.  Past that bound the int32 dot is kept."""
+    d = int(xq.shape[1])
+    if d * 127 * 127 < 2 ** 24 and jax.default_backend() != "tpu":
+        dot = jax.lax.dot_general(
+            xq.astype(f32), yq.astype(f32), (((1,), (1,)), ((), ())),
+            preferred_element_type=f32)
+    else:
+        dot = jax.lax.dot_general(
+            xq, yq, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32).astype(f32)
+    cross = dot * sx * sy.reshape(1, -1)
+    dist = jnp.maximum(x2 + y2.reshape(1, -1) - 2.0 * cross, 0.0)
+    match = qseg_vec[:, None] == cseg[None, :]
+    dist = jnp.where(match, dist, jnp.inf)
+    neg, idx = jax.lax.top_k(-dist, k)
+    vals = -neg
+    bad = ~jnp.isfinite(vals)
+    return jnp.where(bad, jnp.inf, vals), jnp.where(bad, -1, idx)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "kq", "n_desc",
-                                             "interpret"))
-def _sq8_topk_descriptors(vectors, base_ids, deleted, x, qseg, starts,
-                          lens, owners, tail_res_ids, tail_res_owners,
-                          tail_ship_ids, tail_ship_owners, tail_ship_rows,
-                          k: int, kq: int, *, n_desc: int,
-                          interpret: bool = False):
-    """Descriptor-resolved SQ8 scan + fp32 rerank: the quantized analogue
-    of ``distance_topk_descriptors`` — assembly, quantization, the int8
-    segmented kernel, and the exact rerank all fuse into one executable,
-    so the SQ8 path ships the same planning integers as the fp32 path."""
-    from .distance_topk import assemble_flat_candidates
-    y, cseg, gid_flat = assemble_flat_candidates(
-        vectors, base_ids, deleted, starts, lens, owners, tail_res_ids,
-        tail_res_owners, tail_ship_ids, tail_ship_owners, tail_ship_rows,
-        n_desc)
-    n = int(y.shape[0])
-    xq, sx, x2 = quantize_sq8(x)
-    yq, sy, y2 = quantize_sq8(y)
-    vals_q, idx = _quantized_topk_segmented(
-        xq, sx, x2, yq, sy, y2, qseg, cseg.reshape(1, n), kq,
-        interpret=interpret, valid_n=n)
-    # exact fp32 rerank of the quantized candidates, per query row
-    cand = y[jnp.clip(idx, 0, n - 1)]                 # (Q, kq, d)
-    diff = cand - x[:, None, :]
-    d2 = jnp.sum(diff * diff, axis=-1)
+                                             "interpret", "impl"))
+def _sq8_topk_descriptors(vectors, vq, vsc, vsq, vl1, base_ids, deleted, x,
+                          qseg, starts, lens, owners, tail_res_ids,
+                          tail_res_owners, tail_ship_ids, tail_ship_owners,
+                          tail_ship_rows, k: int, kq: int, *, n_desc: int,
+                          interpret: bool = False, impl: str = "pallas"):
+    """Descriptor-resolved SQ8 scan + fp32 rerank + certificate: the
+    quantized analogue of ``distance_topk_descriptors``.
+
+    The candidate codes come from the RESIDENT quantized table
+    ``(vq, vsc, vsq, vl1)`` uploaded once by ``to_device`` — only the
+    shipped delta tail is quantized in-trace — so the scan reads int8
+    rows from HBM and the only fp32 row traffic is the (Q, kq, d) rerank
+    gather.  Returns ``(vals, gids, cert)``: exact reranked distances,
+    global ids, and a per-query bool that is True iff the result provably
+    equals the fp32 scan's (see module docstring); the executor escalates
+    batches with any False row."""
+    from .distance_topk import expand_descriptors
+
+    # --- assemble the flat candidate layout against the int8 table -----
+    if n_desc:
+        dcand, down = expand_descriptors(base_ids, starts, lens, owners,
+                                         n_desc)
+    else:
+        dcand = jnp.empty((0,), jnp.int32)
+        down = jnp.empty((0,), jnp.int32)
+    cand_res = jnp.concatenate([dcand, tail_res_ids.astype(jnp.int32)])
+    own_res = jnp.concatenate([down, tail_res_owners.astype(jnp.int32)])
+    dn = int(deleted.shape[0])
+    if dn and cand_res.shape[0]:
+        dead = deleted[jnp.clip(cand_res, 0, dn - 1)]
+        own_res = jnp.where(dead, -3, own_res)
+    n_res = int(cand_res.shape[0])
+    ts = int(tail_ship_rows.shape[0])
+
+    yq_p, sy_p, y2_p, l1_p = [], [], [], []
+    if n_res:
+        yq_p.append(vq[cand_res])
+        sy_p.append(vsc[cand_res])
+        y2_p.append(vsq[cand_res])
+        l1_p.append(vl1[cand_res])
+    if ts:
+        sq, ssc, ssq, sl1 = quantize_sq8_ext(tail_ship_rows)
+        yq_p.append(sq)
+        sy_p.append(ssc)
+        y2_p.append(ssq)
+        l1_p.append(sl1)
+    cat = (lambda p: jnp.concatenate(p, axis=0) if len(p) > 1 else p[0])
+    yq, sy, y2, yl1 = cat(yq_p), cat(sy_p), cat(y2_p), cat(l1_p)
+    cseg = jnp.concatenate([own_res, tail_ship_owners.astype(jnp.int32)])
+    gid_flat = jnp.concatenate([cand_res, tail_ship_ids.astype(jnp.int32)])
+    n = n_res + ts
+    qp, d = x.shape
+
+    # --- int8 segmented scan: top-kq by quantized distance -------------
+    xq, sx, x2, xl1 = quantize_sq8_ext(x)
+    if impl == "xla":
+        vals_q, idx = _sq8_dense_segmented(xq, sx, x2, yq, sy, y2,
+                                           qseg[:, 0], cseg, kq)
+    else:
+        bq, bn = select_tiles(qp, n, d, itemsize=1, k=kq, divisor_n=n)
+        vals_q, idx = _quantized_topk_segmented(
+            xq, sx, x2, yq, sy, y2, qseg, cseg.reshape(1, n), kq,
+            block_q=min(bq, qp), block_n=bn, interpret=interpret,
+            valid_n=n)
+
+    # --- exact fp32 rerank: gather only the (Q, kq, d) candidate rows --
+    idxc = jnp.clip(idx, 0, n - 1)
+    rowi = gid_flat[idxc]                    # resident gid == vectors row
+    if n_res and ts:
+        nv = max(int(vectors.shape[0]), 1)
+        from_res = vectors[jnp.clip(rowi, 0, nv - 1)]
+        from_ship = tail_ship_rows[jnp.clip(idxc - n_res, 0, ts - 1)]
+        cand = jnp.where((idxc < n_res)[..., None], from_res, from_ship)
+    elif ts:
+        cand = tail_ship_rows[idxc]
+    else:
+        cand = vectors[rowi]
+    xf = x.astype(f32)
+    candf = cand.astype(f32)
+    # same GEMM-form distance as the fp32 kernels, so certified results
+    # are numerically interchangeable with the fp32 scan's
+    xy = jnp.einsum("qd,qkd->qk", xf, candf,
+                    preferred_element_type=f32)
+    c2 = jnp.sum(candf * candf, axis=-1)
+    x2r = jnp.sum(xf * xf, axis=-1, keepdims=True)
+    d2 = jnp.maximum(x2r + c2 - 2.0 * xy, 0.0)
     d2 = jnp.where(idx >= 0, d2, jnp.inf)
     neg, pos = jax.lax.top_k(-d2, k)
     fidx = jnp.take_along_axis(idx, pos, axis=1)
     gids = jnp.where(fidx >= 0, gid_flat[jnp.clip(fidx, 0, n - 1)], -1)
     vals = jnp.where(fidx >= 0, -neg, jnp.inf)
-    return vals, gids
+
+    # --- certificate: can any excluded candidate beat the top-k? -------
+    live = cseg >= 0
+    own = jnp.clip(cseg, 0, qp - 1)
+    u = jnp.where(live, sy[:, 0], 0.0)
+    t = jnp.where(live, sy[:, 0] * (yl1[:, 0] + d / 2.0), 0.0)
+    umax = jnp.zeros((qp,), f32).at[own].max(u)
+    tmax = jnp.zeros((qp,), f32).at[own].max(t)
+    oq = jnp.clip(qseg[:, 0], 0, qp - 1)
+    eps = sx[:, 0] * (xl1[:, 0] * umax[oq] + tmax[oq])
+    qkq = vals_q[:, -1]                      # kq-th kept quantized dist
+    dk = vals[:, k - 1]                      # k-th exact reranked dist
+    # margin absorbs f32 rounding of the quantized estimate; a NaN or a
+    # clamped-to-zero q_kq fails the comparison and escalates safely
+    margin = eps + 1e-5 * (jnp.abs(qkq) + jnp.abs(dk)) + 1e-12
+    cert = jnp.isposinf(qkq) | (dk < qkq - margin)
+    return vals, gids, cert
 
 
-def topk_sq8_segmented_desc(vectors, base_ids, deleted, x, qseg,
+def topk_sq8_segmented_desc(vectors, quant, base_ids, deleted, x, qseg,
                             desc_starts, desc_lens, desc_owners,
                             tail_res_ids, tail_res_owners, tail_ship_ids,
                             tail_ship_rows, tail_ship_owners, k: int, *,
                             overfetch: int = 4,
-                            interpret: bool | None = None):
+                            interpret: bool | None = None,
+                            impl: str | None = None):
     """Batched SQ8 executor path: ONE segmented quantized launch for every
-    scan item in the batch (the per-item ``topk_sq8_rerank`` loop this
-    replaces paid a launch + a host→device candidate upload per item).
-    Same descriptor/tail contract and shape bucketing as
-    ``ops.topk_segmented_desc``; ``k·overfetch`` beyond the 128-lane
-    scratch budget raises like the unsegmented wrapper."""
-    from .ops import _on_tpu, _round_up, pad_descriptor_batch, record_launch
+    scan item in the batch.  ``quant`` is the resident int8 table
+    ``(vq, vsc, vsq, vl1)`` from ``to_device``.  Same descriptor/tail
+    contract and shape bucketing as ``ops.topk_segmented_desc``;
+    ``k·overfetch`` beyond the 128-lane scratch budget raises like the
+    unsegmented wrapper.  Returns ``(vals, gids, cert)`` — see
+    ``_sq8_topk_descriptors``."""
+    from .ops import _round_up, pad_descriptor_batch, record_launch
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = default_interpret()
+    if impl is None:
+        impl = default_impl()
     q = x.shape[0]
     kq = max(k * overfetch, k)
     if kq > 128:
@@ -263,13 +417,14 @@ def topk_sq8_segmented_desc(vectors, base_ids, deleted, x, qseg,
         x, qseg, desc_starts, desc_lens, desc_owners, tail_res_ids,
         tail_res_owners, tail_ship_ids, tail_ship_rows, tail_ship_owners)
     kqp = min(_round_up(kq, 8), 128)
-    vals, gids = _sq8_topk_descriptors(
-        vectors, base_ids, deleted, *args, k, kqp, n_desc=key[1],
-        interpret=interpret)
-    record_launch("sq8_scan", key + (k, kqp))
-    vals, gids = vals[:q], gids[:q]
+    vq, vsc, vsq, vl1 = quant
+    vals, gids, cert = _sq8_topk_descriptors(
+        vectors, vq, vsc, vsq, vl1, base_ids, deleted, *args, k, kqp,
+        n_desc=key[1], interpret=interpret, impl=impl)
+    record_launch("sq8_scan", key + (k, kqp, impl))
+    vals, gids, cert = vals[:q], gids[:q], cert[:q]
     bad = (gids < 0) | ~jnp.isfinite(vals)
-    return jnp.where(bad, jnp.inf, vals), jnp.where(bad, -1, gids)
+    return jnp.where(bad, jnp.inf, vals), jnp.where(bad, -1, gids), cert
 
 
 # --------------------------------------------------------------------- #
@@ -285,9 +440,9 @@ def topk_sq8_rerank(x: jax.Array, y: jax.Array, k: int, *,
     HBM bytes: N·d (int8) + k·of·d (fp32) vs N·d·4 for the fp32 scan —
     ~4× less at N ≫ k·of.
     """
-    from .ops import _on_tpu, _pad_to, _round_up
+    from .ops import _pad_to, _round_up
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = default_interpret()
     qn, d = x.shape
     n = y.shape[0]
     kq = max(k * overfetch, k)
@@ -298,8 +453,10 @@ def topk_sq8_rerank(x: jax.Array, y: jax.Array, k: int, *,
             f"overfetch (the executor clamps overfetch to 128//k)")
     xq, sx, x2 = quantize_sq8(x)
     yq, sy, y2 = quantize_sq8(y)
-    qp = _round_up(max(qn, 1), BLOCK_Q)
-    np_ = _round_up(max(n, 1), BLOCK_N)
+    kqp = min(_round_up(kq, 8), 128)
+    bq, bn = select_tiles(qn, n, d, itemsize=1, k=kqp)
+    qp = _round_up(max(qn, 1), bq)
+    np_ = _round_up(max(n, 1), bn)
 
     def pad2(t, rows):
         return jnp.pad(t, ((0, rows - t.shape[0]), (0, 0)))
@@ -307,7 +464,7 @@ def topk_sq8_rerank(x: jax.Array, y: jax.Array, k: int, *,
     vals, idx = quantized_topk(
         pad2(xq, qp), pad2(sx, qp), pad2(x2, qp),
         pad2(yq, np_), pad2(sy, np_), pad2(y2, np_),
-        min(_round_up(kq, 8), 128), interpret=interpret, valid_n=n)
+        kqp, block_q=bq, block_n=bn, interpret=interpret, valid_n=n)
     idx = idx[:qn, :kq]
     # fp32 rerank of the candidate set
     cand = y[jnp.clip(idx, 0, n - 1)].astype(f32)       # (Q, kq, d)
