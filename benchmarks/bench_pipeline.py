@@ -1,0 +1,280 @@
+"""Pipelined serving executor benchmark + gate (DESIGN.md §7) — PR 7.
+
+Measures the same scripted workload through the synchronous serving loop
+(``ContinuousBatcher(pipeline=False)``, the oracle) and the pipelined
+executor (planner thread + async dispatch + deferred fetch), on the jax
+backend:
+
+  * **warm read phase** — distinct-predicate waves, everything cached:
+    pipelined QPS / sync QPS (the overlap win), device idle between
+    consecutive warm waves (target ≈ 0), launches per wave (must be
+    IDENTICAL in both modes — pipelining reorders work, it must not add
+    or remove kernel launches);
+  * **mixed phase** — a 10% write mix (inserts + deletes + a forced
+    compaction) streamed through the batcher in drain cycles: write
+    barriers flush the pipeline, then read waves overlap again; the
+    wall-clock QPS win must survive the barriers.
+
+Writes the repo-root ``BENCH_PR7.json`` trajectory.  With ``--baseline
+<path>`` (what ``scripts/ci.sh`` runs) the run FAILS if:
+
+  (a) pipelined QPS drops below sync QPS (within-run comparison — no
+      cross-machine noise) on the mixed workload,
+  (b) warm-wave device idle exceeds the per-wave threshold,
+  (c) launches-per-wave grows vs the committed baseline (the PR 5/6
+      launch-economy discipline carried into the pipelined path), or
+      differs between the two modes in the same run.
+
+    PYTHONPATH=src python -m benchmarks.bench_pipeline --smoke \
+        --baseline BENCH_PR7.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.vectormaton import VectorMatonConfig
+from repro.data.corpora import make_corpus, sample_patterns
+from repro.kernels import ops
+from repro.serve.batching import ContinuousBatcher
+from repro.serve.engine import Request, RetrievalEngine
+
+from .common import emit, save_json
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+TRAJECTORY = os.path.join(REPO_ROOT, "BENCH_PR7.json")
+
+# warm-wave idle gate: generous for CPU CI (thread hand-off jitter is
+# real); on an accelerator the same counter reads ~µs
+IDLE_MS_PER_WARM_WAVE_MAX = 5.0
+
+
+def _predicates(seqs: List[str], count: int, seed: int = 0) -> List[str]:
+    p1 = sample_patterns(seqs, 1, max(4, count // 2), seed=seed)
+    p2 = sample_patterns(seqs, 2, max(4, count // 2), seed=seed + 1)
+    preds = p1 + p2
+    preds += [f"{a} AND {b}" for a, b in zip(p1, p2)]
+    preds += [f"{a} OR {b}" for a, b in zip(p2, p2[::-1])]
+    preds += [f"NOT {p}" for p in p1[:2]]
+    return preds[:count]
+
+
+def _build(vecs, seqs, n_seed: int, T: int, compact_min: int):
+    cfg = VectorMatonConfig(T=T, M=8, ef_con=50, backend="jax",
+                            compact_min_inserts=compact_min,
+                            compact_ratio=0.05)
+    return RetrievalEngine(vecs[:n_seed], seqs[:n_seed], cfg)
+
+
+def _run_mode(pipeline: bool, vecs, seqs, preds, *, n_seed: int, T: int,
+              compact_min: int, warm_waves: int, wave_queries: int,
+              mixed_cycles: int, mixed_reads: int, mixed_writes: int,
+              k: int, seed: int) -> Dict:
+    """One full scripted pass (fresh engine) in one mode."""
+    n, dim = vecs.shape
+    rng = np.random.default_rng(seed + 7)
+    eng = _build(vecs, seqs, n_seed, T, compact_min)
+    b = ContinuousBatcher(eng, budget=10 ** 9,
+                          max_wave=wave_queries, pipeline=pipeline)
+
+    def submit_reads(count: int, shift: int) -> List[int]:
+        out = []
+        for j in range(count):
+            out.append(b.submit(Request(
+                vector=rng.standard_normal(dim).astype(np.float32),
+                pattern=preds[(shift + j) % len(preds)], k=k)))
+        return out
+
+    # ---- warmup: compile every predicate + shape bucket --------------- #
+    submit_reads(len(preds), 0)
+    b.drain()
+    if pipeline:                       # reset counters after cold waves
+        b._pipe.stats.update(device_idle_ms=0.0, planner_wait_ms=0.0,
+                             pipeline_waves=0, pipeline_replans=0)
+
+    # ---- warm read-only phase ----------------------------------------- #
+    ops.reset_launch_stats()
+    n_warm = warm_waves * wave_queries
+    t0 = time.perf_counter()
+    submit_reads(n_warm, 1)
+    served_warm = b.drain()
+    dt_warm = time.perf_counter() - t0
+    launch_warm = ops.launch_stats()["launches"]
+    warm_stats = dict(b._pipe.stats) if pipeline else {}
+
+    # ---- mixed phase: 10% write mix in drain cycles ------------------- #
+    pool = list(range(n_seed, n))
+    n_reads = n_writes = 0
+    deleted = 0
+    t1 = time.perf_counter()
+    for cyc in range(mixed_cycles):
+        for w in range(mixed_writes):
+            if pool:
+                j = pool.pop(0)
+                b.submit_insert(vecs[j], seqs[j])
+            else:
+                b.submit_delete(deleted)
+                deleted += 1
+            n_writes += 1
+        if cyc == mixed_cycles // 2:
+            b.submit_compact()
+            n_writes += 1
+        n_reads += len(submit_reads(mixed_reads, cyc))
+        b.drain()
+    dt_mixed = time.perf_counter() - t1
+    stats = b.maintenance_stats()
+    b.close()
+    out = {
+        "mode": "pipelined" if pipeline else "sync",
+        "warm_qps": n_warm / dt_warm,
+        "warm_served": len(served_warm),
+        "launches_per_wave": launch_warm / warm_waves,
+        "mixed_qps": n_reads / dt_mixed,
+        "mixed_reads": n_reads,
+        "mixed_writes": n_writes,
+        "compactions": stats["compactions"],
+    }
+    if pipeline:
+        out["device_idle_ms_per_warm_wave"] = (
+            warm_stats["device_idle_ms"] / max(1, warm_waves))
+        out["planner_wait_ms"] = warm_stats["planner_wait_ms"]
+        out["pipeline_replans"] = stats["pipeline_replans"]
+        out["pipeline_waves"] = stats["pipeline_waves"]
+    return out
+
+
+def run(n_seed_frac: float = 0.8, T: int = 40, warm_waves: int = 12,
+        wave_queries: int = 16, mixed_cycles: int = 3,
+        mixed_reads: int = 48, mixed_writes: int = 5, k: int = 10,
+        scale: float = 0.25, compact_min: int = 8, seed: int = 0,
+        retries: int = 1) -> Dict:
+    vecs, seqs = make_corpus("words", scale=scale, seed=seed)
+    n_seed = int(n_seed_frac * len(vecs))
+    preds = _predicates(seqs, wave_queries, seed=seed)
+    kw = dict(n_seed=n_seed, T=T, compact_min=compact_min,
+              warm_waves=warm_waves, wave_queries=wave_queries,
+              mixed_cycles=mixed_cycles, mixed_reads=mixed_reads,
+              mixed_writes=mixed_writes, k=k, seed=seed)
+
+    # interleaved best-of-(1+retries) per mode.  The FIRST pass of the
+    # first mode pays every one-time jit compile at post-compaction
+    # shapes (the cache is process-global), which would hand whichever
+    # mode runs second a fake 10-25x "win"; a second interleaved pass
+    # runs both modes against warm caches, and best-of also damps
+    # scheduler hiccups on shared CI hardware.
+    sync_runs = [_run_mode(False, vecs, seqs, preds, **kw)]
+    pipe_runs = [_run_mode(True, vecs, seqs, preds, **kw)]
+    for _ in range(retries):
+        sync_runs.append(_run_mode(False, vecs, seqs, preds, **kw))
+        pipe_runs.append(_run_mode(True, vecs, seqs, preds, **kw))
+
+    def best(runs: List[Dict]) -> Dict:
+        r = dict(max(runs, key=lambda r: r["mixed_qps"]))
+        r["warm_qps"] = max(x["warm_qps"] for x in runs)
+        if "device_idle_ms_per_warm_wave" in r:
+            r["device_idle_ms_per_warm_wave"] = min(
+                x["device_idle_ms_per_warm_wave"] for x in runs)
+        return r
+
+    sync, pipe = best(sync_runs), best(pipe_runs)
+
+    out = {
+        "config": {"n_seed": n_seed, "dim": int(vecs.shape[1]), "T": T,
+                   "warm_waves": warm_waves,
+                   "wave_queries": wave_queries, "k": k,
+                   "mixed_cycles": mixed_cycles,
+                   "mixed_reads": mixed_reads,
+                   "mixed_writes": mixed_writes},
+        "sync": sync, "pipelined": pipe,
+        "warm_qps_ratio": pipe["warm_qps"] / sync["warm_qps"],
+        "mixed_qps_ratio": pipe["mixed_qps"] / sync["mixed_qps"],
+        "device_idle_ms_per_warm_wave":
+            pipe["device_idle_ms_per_warm_wave"],
+        "launches_per_wave": pipe["launches_per_wave"],
+    }
+
+    emit("pipeline/warm_qps", 1e6 / max(pipe["warm_qps"], 1e-9),
+         f"qps={pipe['warm_qps']:.1f};ratio_vs_sync="
+         f"{out['warm_qps_ratio']:.3f}")
+    emit("pipeline/mixed_qps", 1e6 / max(pipe["mixed_qps"], 1e-9),
+         f"qps={pipe['mixed_qps']:.1f};ratio_vs_sync="
+         f"{out['mixed_qps_ratio']:.3f};write_mix=0.10")
+    emit("pipeline/device_idle",
+         out["device_idle_ms_per_warm_wave"] * 1e3,
+         f"idle_ms_per_warm_wave="
+         f"{out['device_idle_ms_per_warm_wave']:.3f}")
+    save_json("pipeline", out)
+    return out
+
+
+def check(out: Dict, baseline: str | None) -> List[str]:
+    errs = []
+    # (a) the pipeline must not lose to the synchronous loop it wraps
+    if out["mixed_qps_ratio"] < 1.0:
+        errs.append(f"pipelined mixed QPS below sync: "
+                    f"ratio={out['mixed_qps_ratio']:.3f}")
+    # (b) warm waves keep the device busy
+    if out["device_idle_ms_per_warm_wave"] > IDLE_MS_PER_WARM_WAVE_MAX:
+        errs.append(
+            f"device idle {out['device_idle_ms_per_warm_wave']:.2f}"
+            f" ms/warm wave > {IDLE_MS_PER_WARM_WAVE_MAX}")
+    # (c) pipelining must not change the launch economy
+    if out["pipelined"]["launches_per_wave"] != \
+            out["sync"]["launches_per_wave"]:
+        errs.append(
+            f"launches/wave differ: sync="
+            f"{out['sync']['launches_per_wave']} pipelined="
+            f"{out['pipelined']['launches_per_wave']}")
+    if baseline and os.path.exists(baseline):
+        with open(baseline) as f:
+            base = json.load(f)
+        if base.get("config") == out.get("config"):
+            if out["launches_per_wave"] > base["launches_per_wave"]:
+                errs.append(
+                    f"launches_per_wave regressed: "
+                    f"{base['launches_per_wave']} -> "
+                    f"{out['launches_per_wave']}")
+        else:
+            print("# baseline config differs; trajectory gate skipped",
+                  file=sys.stderr)
+    return errs
+
+
+def main(smoke: bool = False, baseline: str | None = None) -> Dict:
+    if smoke:
+        out = run(scale=0.12, warm_waves=10, wave_queries=12,
+                  mixed_cycles=2, mixed_reads=36, mixed_writes=4,
+                  retries=1)
+    else:
+        out = run()
+    errs = check(out, baseline)
+    if errs:
+        # keep the committed baseline intact so the gate keeps firing
+        for e in errs:
+            print(f"# PIPELINE GATE FAILED: {e}", file=sys.stderr)
+        sys.exit(1)
+    with open(TRAJECTORY, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    print(f"bench_pipeline OK: warm x{out['warm_qps_ratio']:.2f} "
+          f"mixed x{out['mixed_qps_ratio']:.2f} vs sync, "
+          f"idle={out['device_idle_ms_per_warm_wave']:.2f}ms/wave, "
+          f"launches/wave={out['launches_per_wave']:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--baseline", default=None,
+                    help="previous BENCH_PR7.json to gate the launch "
+                         "trajectory against")
+    args = ap.parse_args()
+    main(smoke=args.smoke, baseline=args.baseline)

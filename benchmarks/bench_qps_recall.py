@@ -192,8 +192,44 @@ def run_device_smoke(profile: bool = False, seed: int = 0) -> dict:
                     "sq8_fallbacks"):
             print(f"#   {key:>20}: {ms.get(key, 0):10d}")
             out[key] = int(ms.get(key, 0))
+        out["pipeline"] = _profile_pipeline(vecs, seqs, q, preds)
     save_json("qps_recall_device_smoke", out)
     return out
+
+
+def _profile_pipeline(vecs, seqs, queries, preds) -> dict:
+    """Stream a short two-tenant workload through the pipelined batcher
+    and print the DESIGN.md §7 serving counters (pipeline depth, device
+    idle, planner-queue wait, per-tenant depth/p50/p99)."""
+    from repro.serve.batching import ContinuousBatcher
+    from repro.serve.engine import Request, RetrievalEngine
+
+    eng = RetrievalEngine(vecs, seqs,
+                          VectorMatonConfig(T=10 ** 9, backend="jax"))
+    b = ContinuousBatcher(eng, max_wave=len(preds), pipeline=True,
+                          tenant_weights={"a": 2.0, "b": 1.0})
+    for wave in range(6):
+        for j, p in enumerate(preds):
+            b.submit(Request(vector=queries[j % len(queries)], pattern=p,
+                             k=8, tenant="a" if j % 3 else "b"))
+    b.drain()
+    st = b.maintenance_stats()
+    b.close()
+    keys = ("pipeline_waves", "pipeline_depth", "pipeline_replans",
+            "pipeline_barriers", "device_idle_ms", "planner_wait_ms",
+            "staging_grows", "staging_waits")
+    print("# pipelined serving counters (6 waves, 2 tenants, "
+          "DESIGN.md §7):")
+    for key in keys:
+        v = st.get(key, 0)
+        print(f"#   {key:>20}: {v:10.2f}" if isinstance(v, float)
+              else f"#   {key:>20}: {v:10d}")
+    for t, ts in sorted(st.get("tenants", {}).items()):
+        print(f"#   tenant[{t}]: depth={ts['depth']} "
+              f"served={ts['served']} p50={ts['p50_ms']:.2f}ms "
+              f"p99={ts['p99_ms']:.2f}ms")
+    return {k: st.get(k, 0) for k in keys} | {
+        "tenants": st.get("tenants", {})}
 
 
 def main():

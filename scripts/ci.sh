@@ -72,4 +72,12 @@ python -m benchmarks.bench_churn --smoke
 # a failure here names the write path directly
 python -m pytest -q tests/test_churn.py
 
+# pipelined-serving gate (DESIGN.md §7): the same scripted workload runs
+# through the synchronous loop and the pipelined executor; FAIL if the
+# pipeline loses QPS to the sync loop at a 10% write mix, if the device
+# sits idle between warm waves, or if pipelining changes the per-wave
+# launch count (the PR4-6 launch economy must survive reordering);
+# BENCH_PR7.json is the committed trajectory, refreshed in place
+python -m benchmarks.bench_pipeline --smoke --baseline BENCH_PR7.json
+
 echo "ci.sh: all checks passed"

@@ -222,6 +222,30 @@ class QueryPlan:
         return Counter(s.strategy for e in self.entries for s in e.sources)
 
 
+@dataclass
+class PendingExecution:
+    """In-flight result of ``PackedRuntime.dispatch`` (DESIGN.md §7).
+
+    Holds everything ``fetch`` needs to assemble the final per-request
+    results: the device launch outputs (still device arrays — JAX's async
+    dispatch means the kernels may still be running), the per-request
+    (launch, row) routing, host-computed parts (residual verification),
+    and — when the device merge ran — the merged ``(R, k)`` device
+    arrays.  Between ``dispatch`` and ``fetch`` the host is free to plan
+    and dispatch the NEXT wave; touching ``fetch`` is the only point
+    that blocks on the device.
+    """
+    plan: QueryPlan
+    k: int
+    out: List[Tuple[np.ndarray, np.ndarray]]
+    launches: List[Tuple[object, object]]
+    dev_parts: List[List[Tuple[int, int]]]
+    parts: List[List[Tuple[np.ndarray, np.ndarray]]]
+    dev_only: List[int] = field(default_factory=list)
+    merged: Optional[Tuple[object, object]] = None   # (md, mi) on device
+    fetched: bool = False
+
+
 class PackedRuntime:
     """Flattened, device-residable view of a built VectorMaton index."""
 
@@ -606,6 +630,20 @@ class PackedRuntime:
 
         Host (numpy) backend: same plan, NumPy kernels, host merge — the
         bit-exactness oracle for every device stage."""
+        return self.fetch(self.dispatch(queries, plan, k,
+                                        ef_search=ef_search))
+
+    def dispatch(self, queries: np.ndarray, plan: QueryPlan, k: int,
+                 ef_search: int = 64) -> PendingExecution:
+        """Launch every device stage of the plan WITHOUT syncing on the
+        results (DESIGN.md §7): staleness checks, the segmented scan
+        launch, the fused beam launches, residual verification (host
+        work), and the device-side merge fold are all dispatched — JAX's
+        async dispatch returns device futures — and the per-request
+        assembly integers are packed into a ``PendingExecution``.  The
+        caller overlaps the next wave's planning/dispatch with this
+        wave's device execution and calls ``fetch`` when it needs the
+        results.  ``execute`` is the synchronous composition."""
         if plan.generation != self.generation:
             raise ValueError(
                 f"stale plan: compiled against generation "
@@ -623,13 +661,17 @@ class PackedRuntime:
         queries = np.ascontiguousarray(queries, dtype=np.float32)
         out: List[Tuple[np.ndarray, np.ndarray]] = [
             (_EMPTY_F, _EMPTY_I)] * plan.n_requests
-        if not plan.entries:
-            return out
         parts: List[List[Tuple[np.ndarray, np.ndarray]]] = [
             [] for _ in range(plan.n_requests)]
         launches: List[Tuple[object, object]] = []   # (vals, gids) on device
         dev_parts: List[List[Tuple[int, int]]] = [
             [] for _ in range(plan.n_requests)]      # (launch idx, row)
+        pending = PendingExecution(plan=plan, k=k, out=out,
+                                   launches=launches, dev_parts=dev_parts,
+                                   parts=parts)
+        if not plan.entries:
+            pending.fetched = True
+            return pending
         scan_items, graph_shared, graph_filtered, residual_items = (
             self._gather_work(plan))
         if self.backend == "jax":
@@ -650,26 +692,54 @@ class PackedRuntime:
                                       k, ef_search, parts)
         for e, s in residual_items:
             self._execute_residual(queries, e, s, k, parts)
+        # device-merge half that can be DISPATCHED now: requests whose
+        # parts are all launch rows fold on device; the (R, k) result
+        # stays a device future until fetch
         t0 = time.perf_counter()
-        self._merge(plan, launches, dev_parts, parts, k, out)
+        n = plan.n_requests
+        if launches and self.device_merge:
+            pending.dev_only = [r for r in range(n)
+                                if dev_parts[r] and not parts[r]]
+        if pending.dev_only:
+            pending.merged = self._merge_device_launch(
+                pending.dev_only, launches, dev_parts, k)
         self.wave_times["merge_ms"] += (time.perf_counter() - t0) * 1e3
-        return out
+        return pending
 
-    def _merge(self, plan: QueryPlan, launches, dev_parts, parts, k: int,
-               out) -> None:
+    def fetch(self, pending: PendingExecution
+              ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Sync on a dispatched wave's device results and assemble the
+        final per-request (dists, ids).  This is the ONLY point the
+        executor blocks on the device; everything before it is async
+        dispatch, so a pipelined caller fetches wave N while wave N+1 is
+        already executing."""
+        if pending.fetched:
+            return pending.out
+        t0 = time.perf_counter()
+        self._merge_fetch(pending)
+        self.wave_times["merge_ms"] += (time.perf_counter() - t0) * 1e3
+        pending.fetched = True
+        return pending.out
+
+    def _merge_fetch(self, pending: PendingExecution) -> None:
         """Per-request merge: dedup ids across OR disjuncts / overlapping
         sources (keep the closest), drop tombstones, cut to k.  Requests
-        whose parts are all device launch rows fold on device in one
-        ``merge_topk_device`` call; the rest — host backend, or residual
-        parts present — run the NumPy merge, which is the bit-exactness
-        oracle (``device_merge=False`` forces it everywhere)."""
+        whose parts are all device launch rows were folded on device at
+        dispatch (``merge_topk_device``) — here their (R, k) rows cross
+        to the host; the rest — host backend, or residual parts present —
+        run the NumPy merge, which is the bit-exactness oracle
+        (``device_merge=False`` forces it everywhere)."""
+        plan, launches, dev_parts, parts, k, out = (
+            pending.plan, pending.launches, pending.dev_parts,
+            pending.parts, pending.k, pending.out)
         n = plan.n_requests
-        dev_only: List[int] = []
-        if launches and self.device_merge:
-            dev_only = [r for r in range(n)
-                        if dev_parts[r] and not parts[r]]
-        if dev_only:
-            self._merge_device(dev_only, launches, dev_parts, k, out)
+        dev_only = pending.dev_only
+        if pending.merged is not None:
+            md, mi = (np.asarray(pending.merged[0]),
+                      np.asarray(pending.merged[1]))
+            for j, r in enumerate(dev_only):
+                valid = mi[j] >= 0
+                out[r] = (md[j][valid], mi[j][valid].astype(np.int64))
         done = set(dev_only)
         conv: List[Optional[Tuple[np.ndarray, np.ndarray]]] = (
             [None] * len(launches))
@@ -710,12 +780,14 @@ class PackedRuntime:
                 d, i = d[keep], i[keep]
             out[r] = (d[:k], i[:k])
 
-    def _merge_device(self, reqs: List[int], launches, dev_parts, k: int,
-                      out) -> None:
+    def _merge_device_launch(self, reqs: List[int], launches, dev_parts,
+                             k: int) -> Tuple[object, object]:
         """Stack this batch's launch outputs into one (T, W) pool, gather
         each request's rows by index matrix, and fold dedup + top-k on
         device — replacing the per-request Python concatenate/argsort
-        loop with one bucketed launch and ONE (R, k) transfer back."""
+        loop with one bucketed launch and ONE (R, k) transfer back.
+        Returns the (R_pad, k) device arrays WITHOUT syncing: ``fetch``
+        crosses them to the host when the caller needs the results."""
         import jax.numpy as jnp
 
         from ..kernels import ops
@@ -749,10 +821,7 @@ class PackedRuntime:
         md, mi = ops.merge_topk_device(big_d, big_i, jnp.asarray(sel),
                                        delmask, k)
         ops.record_launch("merge", (t_pad, s_max, w, r_pad, k))
-        md, mi = np.asarray(md), np.asarray(mi)
-        for j, r in enumerate(reqs):
-            valid = mi[j] >= 0
-            out[r] = (md[j][valid], mi[j][valid].astype(np.int64))
+        return md, mi
 
     def _gather_work(self, plan: QueryPlan):
         """Split the plan into the executor's four work classes.

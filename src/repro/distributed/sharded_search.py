@@ -524,6 +524,28 @@ def _merge_extras_row(dr: np.ndarray, ir: np.ndarray, ed_row: np.ndarray,
     return dr[order], ir[order]
 
 
+@dataclass
+class ShardedPending:
+    """In-flight result of ``sharded_plan_dispatch`` (DESIGN.md §7).
+
+    ``dv``/``gv`` are the sweep's (rows, k) outputs still on device —
+    JAX async dispatch means the shard_map launch may still be running
+    when dispatch returns.  ``sharded_plan_fetch`` crosses them to the
+    host and runs the sentinel-filter + delta-overflow merge.  The SQ8
+    certificate (``int(bad)``) is an inherent sync point and is resolved
+    INSIDE dispatch — escalation to the fp32 sweep must happen before
+    the launch set is final."""
+    plan: object
+    k: int
+    metric: str
+    queries_np: np.ndarray
+    specs: List[_EntrySpec]
+    out: List[Tuple[np.ndarray, np.ndarray]]
+    dv: Optional[jax.Array] = None
+    gv: Optional[jax.Array] = None
+    fetched: bool = False
+
+
 def sharded_plan_topk(mesh: Mesh, base, runtime, queries, plan, k: int, *,
                       metric: str = "l2", axis: str = "data"):
     """Execute a batched QueryPlan against the row-sharded generation.
@@ -557,6 +579,21 @@ def sharded_plan_topk(mesh: Mesh, base, runtime, queries, plan, k: int, *,
     negligible against the sharded distance work, and answers remain
     exact mid-churn.
     """
+    return sharded_plan_fetch(runtime, sharded_plan_dispatch(
+        mesh, base, runtime, queries, plan, k, metric=metric, axis=axis))
+
+
+def sharded_plan_dispatch(mesh: Mesh, base, runtime, queries, plan,
+                          k: int, *, metric: str = "l2",
+                          axis: str = "data") -> ShardedPending:
+    """Launch the sharded sweep for a batched QueryPlan WITHOUT syncing
+    on the merged top-k (DESIGN.md §7): staleness checks, entry
+    lowering, descriptor/tail assembly and the single shard_map launch
+    all run here; the (rows, k) outputs stay device futures inside the
+    returned ``ShardedPending`` until ``sharded_plan_fetch``.  The
+    legacy dense-mask oracle path and the SQ8 certificate check are
+    synchronous inside dispatch (the certificate decides whether the
+    fp32 sweep must also launch)."""
     from ..kernels import ops
     # same snapshot discipline as PackedRuntime.execute: a plan's CSR
     # offsets and delta id lists are only meaningful against the runtime
@@ -576,15 +613,20 @@ def sharded_plan_topk(mesh: Mesh, base, runtime, queries, plan, k: int, *,
     out = [(np.empty(0, np.float32), np.empty(0, np.int64))
            ] * plan.n_requests
     if not plan.entries:
-        return out
+        return ShardedPending(plan=plan, k=k, metric=metric,
+                              queries_np=queries_np, specs=[], out=out,
+                              fetched=True)
     n_hint = None
     if base is not None:
         n_hint = (int(base) if isinstance(base, (int, np.integer))
                   else int(base.shape[0]))
     sh = runtime.to_device_sharded(mesh, axis=axis, n=n_hint)
     if not getattr(runtime, "shard_descriptors", True):
-        return _sharded_plan_topk_dense(mesh, sh, runtime, queries_np,
-                                        plan, k, metric=metric, axis=axis)
+        out = _sharded_plan_topk_dense(mesh, sh, runtime, queries_np,
+                                       plan, k, metric=metric, axis=axis)
+        return ShardedPending(plan=plan, k=k, metric=metric,
+                              queries_np=queries_np, specs=[], out=out,
+                              fetched=True)
     sh.sync_tombstones(runtime.deleted)
     tf = runtime.traffic
     tf["shard_batches"] += 1
@@ -646,7 +688,8 @@ def sharded_plan_topk(mesh: Mesh, base, runtime, queries, plan, k: int, *,
             jnp.zeros((sh.shards, 0), jnp.int32),
             NamedSharding(mesh, P(axis, None)))
 
-    vals = gids = None
+    pending = ShardedPending(plan=plan, k=k, metric=metric,
+                             queries_np=queries_np, specs=specs, out=out)
     if q_rows and n_desc + t_pad > 0:
         from ..kernels.quant import sq8_supported
         q_n = len(q_rows)
@@ -697,12 +740,26 @@ def sharded_plan_topk(mesh: Mesh, base, runtime, queries, plan, k: int, *,
         tf["shard_descriptor_bytes"] += desc_bytes
         tf["shard_query_bytes"] += q_pad * (d_dim * 4 + 4)
         tf["bytes_to_device"] += desc_bytes + q_pad * (d_dim * 4 + 4)
-        vals = np.asarray(dv)
-        gids = np.asarray(gv, dtype=np.int64)
+        pending.dv, pending.gv = dv, gv
+    return pending
 
-    # ---- host merge: sentinel filter + delta-overflow fold ------------- #
+
+def sharded_plan_fetch(runtime, pending: ShardedPending
+                       ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Sync on a dispatched sharded wave and run the host merge:
+    sentinel filter + delta-overflow fold per request.  This is the only
+    device→host block of the sharded wave — a pipelined caller fetches
+    wave N while wave N+1's shard_map launch is already in flight."""
+    if pending.fetched:
+        return pending.out
+    plan, k, metric = pending.plan, pending.k, pending.metric
+    queries_np, out = pending.queries_np, pending.out
+    vals = gids = None
+    if pending.dv is not None:
+        vals = np.asarray(pending.dv)
+        gids = np.asarray(pending.gv, dtype=np.int64)
     row = 0
-    for e, spec in zip(plan.entries, specs):
+    for e, spec in zip(plan.entries, pending.specs):
         ed, extra_ids = _extras_block(runtime, queries_np, e, spec.extra,
                                       metric)
         for j, r in enumerate(e.requests):
@@ -718,6 +775,7 @@ def sharded_plan_topk(mesh: Mesh, base, runtime, queries, plan, k: int, *,
                 dr, ir = _merge_extras_row(dr, ir, ed[j], extra_ids, k)
             out[r] = (dr.astype(np.float32, copy=False),
                       ir.astype(np.int64, copy=False))
+    pending.fetched = True
     return out
 
 

@@ -29,6 +29,7 @@ an insert-triggered swap never splits a batch across generations).
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -45,6 +46,8 @@ class Request:
                         # e.g. "ab AND NOT (cd OR LIKE 'a%b_')"
     k: int = 10
     ef_search: int = 64
+    tenant: str = "default"   # admission namespace (ContinuousBatcher
+                              # weighted deficit-round-robin, DESIGN.md §7)
 
 
 @dataclass
@@ -53,6 +56,32 @@ class Response:
     distances: np.ndarray
     latency_s: float    # batched serving: wall time of the request's wave
                         # (every request in a batch waits for the batch)
+
+
+@dataclass
+class WavePlan:
+    """Fully-resolved, generation-stamped launch-ready wave: the output
+    of the host planning stage (DESIGN.md §7).  Carries the runtime
+    snapshot it was compiled against — dispatching it after the runtime
+    moved (insert/compaction) raises the PR 3 staleness ValueError, and
+    the pipeline replans instead of locking writers out."""
+    queries: np.ndarray
+    patterns: List
+    k: int
+    ef_search: int
+    rt: object          # PackedRuntime snapshot
+    plan: object        # QueryPlan (generation/delta-version stamped)
+    staged: Optional[object] = None   # StagingSlot (double-buffered upload)
+
+
+@dataclass
+class WavePending:
+    """A dispatched wave: device futures + the WavePlan that produced
+    them.  ``RetrievalEngine.fetch_batch`` resolves it to [(dists, ids)]
+    — the only point that blocks on the device."""
+    wave: WavePlan
+    inner: object       # PendingExecution (single-chip) | ShardedPending
+    sharded: bool
 
 
 class RetrievalEngine:
@@ -70,6 +99,68 @@ class RetrievalEngine:
                                  workers=workers)
         self.mesh = mesh
         self.shard_axis = shard_axis
+        # Serializes host-state mutation: planning (snapshot + predicate
+        # compile + pred-cache), dispatch (launch bookkeeping, traffic
+        # counters) and writes.  RLock so the synchronous public API can
+        # compose the stages under one acquisition.  fetch_batch — the
+        # device sync — runs OUTSIDE the lock: wave N's fetch must not
+        # block wave N+1's planning (DESIGN.md §7).
+        self._lock = threading.RLock()
+        # live pipeline observability, merged into maintenance_stats();
+        # written by serve.pipeline.PipelinedExecutor / ContinuousBatcher
+        self.pipeline_stats: Dict[str, float] = {}
+
+    # ------------------------------------------------------------------ #
+    # pipeline stage API (DESIGN.md §7): plan -> dispatch -> fetch
+    # ------------------------------------------------------------------ #
+    def plan_batch(self, queries: np.ndarray, patterns: Sequence, k: int,
+                   ef_search: int = 64) -> WavePlan:
+        """Host planning stage: snapshot one runtime generation, compile
+        every predicate (pred-cache), coalesce into a QueryPlan.  Pure
+        host work — safe on a background thread under the engine lock."""
+        with self._lock:
+            rt = self.index.snapshot()
+            t0 = time.perf_counter()
+            plan = self.index.plan(patterns, rt)
+            rt.wave_times["plan_ms"] += (time.perf_counter() - t0) * 1e3
+        return WavePlan(
+            queries=np.ascontiguousarray(queries, dtype=np.float32),
+            patterns=list(patterns), k=k, ef_search=ef_search,
+            rt=rt, plan=plan)
+
+    def dispatch_batch(self, wave: WavePlan) -> WavePending:
+        """Device dispatch stage: launch the wave's kernels without
+        syncing on results.  Raises the PR 3 staleness ``ValueError`` if
+        the runtime moved since ``plan_batch`` (insert bumped the delta
+        version, compaction swapped the generation) — the pipeline
+        replans; it never locks writers out."""
+        with self._lock:
+            if self.mesh is None:
+                q = (wave.staged.view(len(wave.queries))
+                     if wave.staged is not None else wave.queries)
+                inner = wave.rt.dispatch(q, wave.plan, wave.k,
+                                         ef_search=wave.ef_search)
+                return WavePending(wave=wave, inner=inner, sharded=False)
+            from ..distributed.sharded_search import sharded_plan_dispatch
+            inner = sharded_plan_dispatch(
+                self.mesh, None, wave.rt, wave.queries, wave.plan, wave.k,
+                metric=self.index.config.metric, axis=self.shard_axis)
+            return WavePending(wave=wave, inner=inner, sharded=True)
+
+    def fetch_batch(self, pending: WavePending
+                    ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Completion stage: sync on the wave's device futures and
+        assemble per-request results.  Deliberately lock-free — the
+        arrays it touches belong to the dispatched wave alone, and
+        blocking here must overlap the next wave's planning."""
+        if pending.sharded:
+            from ..distributed.sharded_search import sharded_plan_fetch
+            out = sharded_plan_fetch(pending.wave.rt, pending.inner)
+        else:
+            out = pending.wave.rt.fetch(pending.inner)
+        if pending.wave.staged is not None:
+            pending.wave.staged.release()
+        return out
 
     # ------------------------------------------------------------------ #
     def query_batch(self, queries: np.ndarray, patterns: Sequence,
@@ -78,16 +169,15 @@ class RetrievalEngine:
         """The engine's execution entry point: single-chip packed
         executor, or the sharded plan executor when a mesh is attached.
         Both plan and execute against ONE runtime snapshot, so an
-        insert-triggered compaction swap never splits a batch."""
-        if self.mesh is None:
-            return self.index.query_batch(queries, patterns, k,
-                                          ef_search=ef_search)
-        from ..distributed.sharded_search import sharded_plan_topk
-        rt = self.index.snapshot()
-        plan = self.index.plan(patterns, rt)
-        return sharded_plan_topk(self.mesh, None, rt, queries, plan, k,
-                                 metric=self.index.config.metric,
-                                 axis=self.shard_axis)
+        insert-triggered compaction swap never splits a batch.  The
+        synchronous composition of the three pipeline stages, with the
+        plan->dispatch pair under one lock acquisition so a concurrent
+        writer can never strand this batch with a stale plan."""
+        with self._lock:
+            wave = self.plan_batch(queries, patterns, k,
+                                   ef_search=ef_search)
+            pending = self.dispatch_batch(wave)
+        return self.fetch_batch(pending)
 
     def serve(self, req: Request) -> Response:
         t0 = time.perf_counter()
@@ -121,23 +211,36 @@ class RetrievalEngine:
     # ------------------------------------------------------------------ #
     def insert(self, vector: np.ndarray, sequence: str) -> int:
         """Delta-runtime write: amortized O(d) append, auto-compacted per
-        the index config's threshold (VectorMaton.maybe_compact)."""
-        return self.index.insert(vector, sequence)
+        the index config's threshold (VectorMaton.maybe_compact).  Bumps
+        the delta version, so any in-flight WavePlan becomes stale and
+        the pipeline replans it — the lock only serializes the write
+        itself against planning/dispatch."""
+        with self._lock:
+            return self.index.insert(vector, sequence)
 
     def delete(self, vector_id: int) -> None:
-        self.index.delete(vector_id)
+        with self._lock:
+            self.index.delete(vector_id)
 
     def compact(self) -> None:
         """Force-fold the write delta into a fresh generation (the
         auto-compaction trigger normally handles this)."""
-        self.index.compact()
+        with self._lock:
+            self.index.compact()
 
     def maintenance_stats(self):
-        """Generation / delta / compaction counters (bench_churn)."""
-        return self.index.maintenance_stats()
+        """Generation / delta / compaction counters (bench_churn), plus
+        the live pipeline counters (pipeline_depth, device_idle_ms,
+        planner-queue wait, per-tenant depth/latency) when a pipelined
+        batcher is attached (DESIGN.md §7)."""
+        with self._lock:
+            stats = self.index.maintenance_stats()
+            stats.update(self.pipeline_stats)
+        return stats
 
     def checkpoint(self, path: str) -> None:
-        self.index.save(path)
+        with self._lock:
+            self.index.save(path)
 
     @classmethod
     def restore(cls, path: str, mesh=None,
@@ -146,6 +249,8 @@ class RetrievalEngine:
         self.index = VectorMaton.load(path)
         self.mesh = mesh
         self.shard_axis = shard_axis
+        self._lock = threading.RLock()
+        self.pipeline_stats = {}
         return self
 
 
