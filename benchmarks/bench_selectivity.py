@@ -56,16 +56,13 @@ def _predicate_suite(seqs: List[str], seed: int = 0) -> List[str]:
     return preds
 
 
-def run(corpus: str = "words", scale: float = 0.25, n_queries: int = 16,
-        T: int = 30, seed: int = 0):
-    vecs, seqs = make_corpus(corpus, scale=scale, seed=seed)
-    n, dim = vecs.shape
-    rng = np.random.default_rng(seed)
-    vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=T, M=8, ef_con=50))
-
+def _measure(vm: VectorMaton, preds: List[str], n_queries: int,
+             rng: np.random.Generator):
+    """Per-predicate batched QPS + recall vs the exact member set."""
+    n, dim = vm.vectors.shape
     rows = []
     per_strategy = defaultdict(lambda: {"qps": [], "recall": [], "sel": []})
-    for ptxt in _predicate_suite(seqs, seed=seed):
+    for ptxt in preds:
         try:
             cp = vm.compile(ptxt)
         except ValueError:
@@ -82,7 +79,7 @@ def run(corpus: str = "words", scale: float = 0.25, n_queries: int = 16,
         queries = rng.standard_normal((n_queries, dim)).astype(np.float32)
         gts = []
         for q in queries:
-            d = ((vecs[ids] - q) ** 2).sum(1)
+            d = ((vm.vectors[ids] - q) ** 2).sum(1)
             gts.append(set(ids[np.argsort(d, kind="stable")[:K]].tolist()))
         # batched QPS (the serving path: one plan, one executor sweep)
         vm.query_batch(queries[:2], [ptxt, ptxt], K)      # warm-up
@@ -100,6 +97,17 @@ def run(corpus: str = "words", scale: float = 0.25, n_queries: int = 16,
         per_strategy[strategy]["qps"].append(qps)
         per_strategy[strategy]["recall"].append(rec)
         per_strategy[strategy]["sel"].append(sel)
+    return rows, per_strategy
+
+
+def run(corpus: str = "words", scale: float = 0.25, n_queries: int = 16,
+        T: int = 30, seed: int = 0):
+    vecs, seqs = make_corpus(corpus, scale=scale, seed=seed)
+    n, _ = vecs.shape
+    rng = np.random.default_rng(seed)
+    vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=T, M=8, ef_con=50))
+    rows, per_strategy = _measure(vm, _predicate_suite(seqs, seed=seed),
+                                  n_queries, rng)
 
     summary = {}
     for strategy, agg in sorted(per_strategy.items()):
@@ -120,18 +128,71 @@ def run(corpus: str = "words", scale: float = 0.25, n_queries: int = 16,
     return summary
 
 
+def run_attributes(corpus: str = "words", scale: float = 0.1,
+                   n_queries: int = 8, seed: int = 0):
+    """Attribute-filter sweep: tag / range / hybrid predicates over a
+    raw-only index (T=1e9), so every strategy the compiler picks is exact
+    — the gate requires recall 1.0 across the whole sweep."""
+    vecs, seqs = make_corpus(corpus, scale=scale, seed=seed)
+    n, _ = vecs.shape
+    rng = np.random.default_rng(seed)
+    genres = ["rock", "jazz", "pop", "folk"]
+    attrs = [{"genre": genres[int(rng.integers(0, len(genres)))],
+              "price": float(np.round(rng.uniform(0, 100), 2))}
+             for _ in range(n)]
+    vm = VectorMaton(
+        vecs, seqs,
+        VectorMatonConfig(T=10 ** 9,
+                          schema={"genre": "tag", "price": "numeric"}),
+        attributes=attrs)
+    p2 = sample_patterns(seqs, 2, 4, seed=seed)
+    preds = ([f"genre = '{g}'" for g in genres[:2]]
+             + ["price < 10", "price < 50",
+                "price >= 25 AND price <= 75"]        # range-window widths
+             + [f"{a} AND genre = '{g}'" for a, g in zip(p2, genres)]
+             + [f"{a} AND price < 50" for a in p2[:2]]
+             + ["genre = 'rock' OR price > 90"])
+    rows, per_strategy = _measure(vm, preds, n_queries, rng)
+    summary = {}
+    for strategy, agg in sorted(per_strategy.items()):
+        summary[strategy] = {
+            "n_predicates": len(agg["qps"]),
+            "mean_qps": float(np.mean(agg["qps"])),
+            "mean_recall": float(np.mean(agg["recall"])),
+            "mean_selectivity": float(np.mean(agg["sel"])),
+        }
+        emit(f"selectivity-attr/{corpus}/{strategy}",
+             1e6 / summary[strategy]["mean_qps"],
+             f"recall={summary[strategy]['mean_recall']:.3f};"
+             f"sel={summary[strategy]['mean_selectivity']:.3f};"
+             f"n={len(agg['qps'])}")
+    save_json(f"selectivity_attr_{corpus}",
+              {"corpus": corpus, "n": n, "rows": rows,
+               "per_strategy": summary})
+    # exactness gate: raw-only index => every strategy must be exact
+    assert rows, "no attribute predicates compiled"
+    bad = [r for r in rows if r["recall"] < 1.0]
+    assert not bad, f"attribute sweep recall < 1.0: {bad}"
+    return summary
+
+
 def main(smoke: bool = False):
     if smoke:
         s = run("words", scale=0.1, n_queries=4)
         assert s, "no predicates compiled"
         assert all(v["mean_recall"] >= 0.8 for v in s.values()), s
+        sa = run_attributes("words", scale=0.1, n_queries=4)
+        assert sa, "no attribute predicates compiled"
         print("bench_selectivity smoke OK:",
-              {k: round(v["mean_recall"], 3) for k, v in s.items()})
+              {k: round(v["mean_recall"], 3) for k, v in s.items()},
+              "attr:",
+              {k: round(v["mean_recall"], 3) for k, v in sa.items()})
         return
     # 'prot' (long 20-symbol sequences): dense conjunctions land in the
     # filtered_graph regime; 'words' covers the scan/residual spectrum
     for corpus in ("words", "prot"):
         run(corpus)
+    run_attributes("words")
 
 
 if __name__ == "__main__":

@@ -34,8 +34,14 @@ print(f"batched-engine smoke OK: {len(reqs)} requests, "
       f"strategies={dict(plan.strategies)}")
 PY
 
+# end-to-end example (deliverable b): embed + index + serve plain,
+# boolean, and hybrid attribute predicates, checkpoint and restore —
+# deterministic (seeded pattern sampling), so a failure is a regression
+python examples/pattern_search.py
+
 # benchmark smoke: the selectivity sweep must run end-to-end on CPU and
-# hold recall for every strategy it exercises
+# hold recall for every strategy it exercises; the attribute sweep is
+# gated on recall 1.0 (raw-only index => every strategy exact)
 python -m benchmarks.bench_selectivity --smoke
 
 # device-resident executor smoke (DESIGN.md §3): zero candidate-id bytes

@@ -272,6 +272,16 @@ class PackedRuntime:
         self.accum = accum
         self.generation = generation
         self.n_states = len(kind)       # state-count watermark at freeze
+        # CSR segment count: automaton states + attribute pseudo-segments
+        # appended by ``build`` (per-attribute sorted-ID arrays).  Only
+        # [0, n_states) are automaton states (kind/inherit/delta apply);
+        # [n_states, n_csr) are attribute segments addressed by
+        # attr_num/attr_tag and resolved as descriptors like any other.
+        self.n_csr = len(base_ptr) - 1
+        self.attr_schema: Dict[str, str] = {}
+        self.attr_num: Dict[str, Tuple[int, np.ndarray]] = {}
+        self.attr_tag: Dict[str, Dict[str, int]] = {}
+        self.attributes: List[dict] = []   # live view, same as sequences
         self.delta = DeltaRuntime(len(vectors), len(kind))
         # id -> graph states whose node set contains it (delete fan-out)
         self._id_graph_states: Optional[Dict[int, List[int]]] = None
@@ -355,6 +365,45 @@ class PackedRuntime:
                 graph_objs[u] = idx.graph
             chunks.append(seg)
             base_ptr[u + 1] = base_ptr[u] + len(seg)
+        # Attribute pseudo-segments (DESIGN.md §9): one sorted-by-value
+        # ID segment per numeric field (rank ranges answer Range leaves
+        # as descriptor slices) and one sorted-ID segment per (tag field,
+        # value).  They live in the same CSR as chain segments, so the
+        # resident base_ids answers them with zero candidate-id upload.
+        schema = dict(getattr(vm.config, "schema", None) or {})
+        attr_rows = getattr(vm, "attributes", None) or []
+        attr_num: Dict[str, Tuple[int, np.ndarray]] = {}
+        attr_tag: Dict[str, Dict[str, int]] = {}
+        attr_segs: List[np.ndarray] = []
+        if schema:
+            n_rows = min(len(vm.vectors), len(attr_rows))
+
+            def _pseudo(seg: np.ndarray) -> int:
+                attr_segs.append(np.asarray(seg, dtype=np.int64))
+                return n + len(attr_segs) - 1
+
+            for f in sorted(schema):
+                if schema[f] == "numeric":
+                    ids = np.asarray([i for i in range(n_rows)
+                                      if f in attr_rows[i]], np.int64)
+                    vals = np.asarray([float(attr_rows[int(i)][f])
+                                       for i in ids], np.float64)
+                    order = np.lexsort((ids, vals))
+                    attr_num[f] = (_pseudo(ids[order]), vals[order])
+                else:
+                    groups: Dict[str, List[int]] = {}
+                    for i in range(n_rows):
+                        v = attr_rows[i].get(f)
+                        if v is not None:
+                            groups.setdefault(str(v), []).append(i)
+                    attr_tag[f] = {
+                        v: _pseudo(np.asarray(groups[v], np.int64))
+                        for v in sorted(groups)}
+        if attr_segs:
+            lens = np.asarray([len(s) for s in attr_segs], np.int64)
+            base_ptr = np.concatenate(
+                [base_ptr, base_ptr[-1] + np.cumsum(lens)])
+            chunks.extend(attr_segs)
         base_ids = (np.concatenate(chunks) if chunks
                     else np.empty(0, np.int64))
         rt = cls(vm.vectors, kind, np.asarray(vm.inherit, dtype=np.int64),
@@ -367,6 +416,12 @@ class PackedRuntime:
         # share (don't copy) the live sequence list: residual verification
         # of delta ids must see sequences appended after this freeze
         rt.sequences = getattr(vm, "sequences", rt.sequences)
+        rt.attr_schema = schema
+        rt.attr_num = attr_num
+        rt.attr_tag = attr_tag
+        # live view for the same reason as sequences: attribute leaves
+        # evaluate post-freeze inserts host-side at compile time
+        rt.attributes = getattr(vm, "attributes", rt.attributes)
         return rt
 
     # ------------------------------------------------------------------ #
@@ -598,10 +653,18 @@ class PackedRuntime:
                     sm[s.delta_ids] = True
             if s.verify is not None:
                 for i in np.nonzero(sm)[0]:
-                    if not s.verify.matches(self.sequences[int(i)]):
+                    if not s.verify.matches(self.sequences[int(i)],
+                                            self._attrs_of(int(i))):
                         sm[i] = False
             m |= sm
         return m
+
+    def _attrs_of(self, gid: int) -> Optional[dict]:
+        """Record attributes for residual verification; None when the
+        collection carries no attributes (pattern-only predicates never
+        read them)."""
+        a = self.attributes
+        return a[gid] if a and gid < len(a) else None
 
     # ------------------------------------------------------------------ #
     # executor
@@ -1325,7 +1388,7 @@ class PackedRuntime:
         def ok(gid: int) -> bool:
             v = cache.get(gid)
             if v is None:
-                v = bool(s.verify.matches(seqs[gid]))
+                v = bool(s.verify.matches(seqs[gid], self._attrs_of(gid)))
                 cache[gid] = v
             return v
 
@@ -1384,6 +1447,7 @@ class PackedRuntime:
             "raw_states": int((self.kind == KIND_RAW).sum()),
             "graph_states": int((self.kind == KIND_GRAPH).sum()),
             "base_entries": int(self.base_ptr[-1]),
+            "attr_segments": self.n_csr - self.n_states,
             "device_resident": int(self._dev is not None),
             "generation": self.generation,
             "delta_pending": self.delta.pending,

@@ -1,17 +1,22 @@
-"""Boolean pattern predicates — AST, parser, and plan compiler (DESIGN.md §3).
+r"""Boolean pattern predicates — AST, parser, and plan compiler (DESIGN.md §3).
 
 The paper motivates VectorMaton with SQL-style ``LIKE``/``CONTAINS``
 predicates over sequence attributes; real filtered-ANNS workloads arrive as
 *boolean combinations* of such predicates.  This module is the layer that
 turns a predicate into something the packed executor can run:
 
-  * **AST** — ``Contains``, ``Like`` (``%``/``_`` wildcards), ``And``,
-    ``Or``, ``Not``; every node evaluates exactly on a host sequence
-    (``matches``) and canonicalizes to a coalescing key (``key``).
+  * **AST** — ``Contains``, ``Like`` (``%``/``_`` wildcards, ``\%``/
+    ``\_`` escapes), structured attribute filters ``Tag(field, values)``
+    and ``Range(field, lo, hi)``, plus ``And``, ``Or``, ``Not``; every
+    node evaluates exactly on a host (sequence, attrs) record
+    (``matches``), canonicalizes to a coalescing key (``key``), and
+    renders back to parseable grammar text (``render``).
   * **Parser** — a tiny recursive-descent grammar over request strings:
-    ``CONTAINS 'ab' AND NOT (cd OR LIKE 'a%b_')``.  A string with no
-    predicate syntax is a plain CONTAINS pattern, so every pre-existing
-    request shape keeps working verbatim.
+    ``CONTAINS 'ab' AND NOT (cd OR LIKE 'a%b_')``, attribute comparisons
+    ``genre = 'rock' AND price < 10``.  Quoted literals double embedded
+    quotes SQL-style (``'it''s'``).  A string with no predicate syntax
+    is a plain CONTAINS pattern, so every pre-existing request shape
+    keeps working verbatim.
   * **Compiler** — lowers a predicate to a list of ``CompiledSource``
     disjuncts against a ``PackedRuntime``.  Each leaf resolves to an ESAM
     state cover (the chain of CSR base segments whose union is exactly
@@ -46,8 +51,9 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 __all__ = [
-    "Predicate", "Contains", "Like", "And", "Or", "Not",
+    "Predicate", "Contains", "Like", "Tag", "Range", "And", "Or", "Not",
     "PredicateSyntaxError", "parse_predicate", "as_predicate",
+    "quote_literal",
     "CompiledSource", "CompiledPredicate", "compile_predicate",
 ]
 
@@ -62,14 +68,26 @@ FILTERED_GRAPH_MIN_FRAC = 0.25      # fraction of the anchor cover surviving
 # AST
 # ===================================================================== #
 
+def quote_literal(text: str) -> str:
+    """Quote ``text`` for the predicate grammar: embedded quotes double
+    SQL-style, so any literal — spaces, keywords, parens, operators,
+    quotes — round-trips through the tokenizer."""
+    return "'" + str(text).replace("'", "''") + "'"
+
+
 class Predicate:
     """Base class.  Subclasses are immutable value objects."""
 
     def key(self) -> str:
         raise NotImplementedError
 
-    def matches(self, seq) -> bool:
-        """Exact host-side evaluation against one sequence."""
+    def matches(self, seq, attrs=None) -> bool:
+        """Exact host-side evaluation against one record: its sequence
+        plus (for attribute nodes) its attribute dict."""
+        raise NotImplementedError
+
+    def render(self) -> str:
+        """Grammar text that reparses to an equal-``key()`` predicate."""
         raise NotImplementedError
 
     # sugar so tests/examples can compose: a & b, a | b, ~a
@@ -81,6 +99,12 @@ class Predicate:
 
     def __invert__(self) -> "Not":
         return Not(self)
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, Predicate) and self.key() == other.key()
+
+    def __hash__(self) -> int:
+        return hash(self.key())
 
     def __repr__(self) -> str:
         return self.key()
@@ -95,7 +119,12 @@ class Contains(Predicate):
     def key(self) -> str:
         return f"CONTAINS({self.pattern!r})"
 
-    def matches(self, seq) -> bool:
+    def render(self) -> str:
+        if not isinstance(self.pattern, str):
+            raise TypeError("only string CONTAINS patterns render")
+        return f"CONTAINS {quote_literal(self.pattern)}"
+
+    def matches(self, seq, attrs=None) -> bool:
         if isinstance(self.pattern, str) and isinstance(seq, str):
             return self.pattern in seq
         pat = tuple(self.pattern)
@@ -108,47 +137,183 @@ class Contains(Predicate):
 
 class Like(Predicate):
     """SQL LIKE over the whole sequence: ``%`` = any run (incl. empty),
-    ``_`` = exactly one symbol.  String sequences only."""
+    ``_`` = exactly one symbol.  A backslash escapes the next character,
+    so ``\\%`` / ``\\_`` / ``\\\\`` match the literal ``%`` / ``_`` /
+    ``\\``.  The pattern is parsed ONCE into wildcard/literal tokens;
+    ``regex``, ``literals``, and ``as_contains`` all derive from the
+    same token list so the escape rules cannot drift.  String sequences
+    only."""
 
     def __init__(self, pattern: str) -> None:
         if not isinstance(pattern, str):
             raise TypeError("LIKE patterns must be strings")
         self.pattern = pattern
+        self._toks: Optional[List[Tuple[str, str]]] = None
 
     def key(self) -> str:
         return f"LIKE({self.pattern!r})"
 
+    def render(self) -> str:
+        return f"LIKE {quote_literal(self.pattern)}"
+
+    def tokens(self) -> List[Tuple[str, str]]:
+        """[('any'|'one'|'lit', char)] — the escape-resolved pattern.  A
+        trailing lone backslash is the literal backslash."""
+        if self._toks is None:
+            toks: List[Tuple[str, str]] = []
+            p, i = self.pattern, 0
+            while i < len(p):
+                c = p[i]
+                if c == "\\" and i + 1 < len(p):
+                    toks.append(("lit", p[i + 1]))
+                    i += 2
+                elif c == "%":
+                    toks.append(("any", c))
+                    i += 1
+                elif c == "_":
+                    toks.append(("one", c))
+                    i += 1
+                else:
+                    toks.append(("lit", c))
+                    i += 1
+            self._toks = toks
+        return self._toks
+
     def regex(self) -> "re.Pattern":
         parts = []
-        for ch in self.pattern:
-            if ch == "%":
+        for kind, ch in self.tokens():
+            if kind == "any":
                 parts.append(".*")
-            elif ch == "_":
+            elif kind == "one":
                 parts.append(".")
             else:
                 parts.append(re.escape(ch))
         return re.compile("".join(parts), re.DOTALL)
 
-    def matches(self, seq) -> bool:
+    def matches(self, seq, attrs=None) -> bool:
         if not isinstance(seq, str):
             raise TypeError("LIKE predicates require string sequences")
         return self.regex().fullmatch(seq) is not None
 
     def literals(self) -> List[str]:
-        """Maximal wildcard-free runs — each is a necessary CONTAINS."""
-        return [lit for lit in re.split(r"[%_]+", self.pattern) if lit]
+        """Maximal wildcard-free runs — each is a necessary CONTAINS.
+        Escaped wildcard characters are ordinary literal characters and
+        join their surrounding run."""
+        out: List[str] = []
+        cur: List[str] = []
+        for kind, ch in self.tokens():
+            if kind == "lit":
+                cur.append(ch)
+            elif cur:
+                out.append("".join(cur))
+                cur = []
+        if cur:
+            out.append("".join(cur))
+        return out
 
     def as_contains(self) -> Optional[Contains]:
         """``%lit%`` (no ``_``) is exactly CONTAINS(lit); bare ``%`` runs
-        are the empty pattern (match-all).  ``LIKE ''`` is NOT rewritable:
-        it matches only the empty sequence (residual verification)."""
-        collapsed = re.sub(r"%+", "%", self.pattern)
-        if collapsed == "%":
+        are the empty pattern (match-all).  ``LIKE ''`` is NOT rewritable
+        (it matches only the empty sequence) and neither is an escaped
+        pattern like ``\\%`` — a literal-only pattern anchors both ends,
+        so it stays residual rather than collapsing to match-all."""
+        toks = self.tokens()
+        if not toks:
+            return None
+        if all(kind == "any" for kind, _ in toks):
             return Contains("")
-        m = re.fullmatch(r"%([^%_]+)%", collapsed)
-        if m:
-            return Contains(m.group(1))
+        i, j = 0, len(toks)
+        while i < j and toks[i][0] == "any":
+            i += 1
+        while j > i and toks[j - 1][0] == "any":
+            j -= 1
+        if i == 0 or j == len(toks):          # not %-wrapped on both sides
+            return None
+        mid = toks[i:j]
+        if all(kind == "lit" for kind, _ in mid):
+            return Contains("".join(ch for _, ch in mid))
         return None
+
+
+class Tag(Predicate):
+    """Categorical attribute filter: ``attrs[field] ∈ values``.  Values
+    compare as strings (the schema's ``tag`` type).  Parsed from
+    ``field = 'value'``; multi-value tags compose/parse as OR."""
+
+    def __init__(self, field: str, values) -> None:
+        vals = (values,) if isinstance(values, str) else tuple(values)
+        self.field = str(field)
+        self.values = tuple(sorted(str(v) for v in vals))
+        if not self.values:
+            raise ValueError("Tag needs at least one value")
+
+    def key(self) -> str:
+        return f"TAG({self.field!r},{self.values!r})"
+
+    def render(self) -> str:
+        parts = [f"{self.field} = {quote_literal(v)}" for v in self.values]
+        return parts[0] if len(parts) == 1 else "(" + " OR ".join(parts) + ")"
+
+    def matches(self, seq, attrs=None) -> bool:
+        if attrs is None:
+            raise ValueError(
+                f"attribute predicate {self.key()} needs the record's "
+                f"attribute dict (matches(seq, attrs))")
+        v = attrs.get(self.field)
+        return v is not None and str(v) in self.values
+
+
+class Range(Predicate):
+    """Numeric attribute filter: ``lo <(=) attrs[field] <(=) hi`` with
+    either bound optional.  Parsed from ``field < 10`` / ``field >= 2`` /
+    ``field = 3`` (equality is the degenerate closed range)."""
+
+    def __init__(self, field: str, lo=None, hi=None,
+                 incl_lo: bool = True, incl_hi: bool = True) -> None:
+        self.field = str(field)
+        self.lo = None if lo is None else float(lo)
+        self.hi = None if hi is None else float(hi)
+        self.incl_lo = bool(incl_lo)
+        self.incl_hi = bool(incl_hi)
+        if self.lo is None and self.hi is None:
+            raise ValueError("Range needs at least one bound")
+
+    def key(self) -> str:
+        return (f"RANGE({self.field!r},{self.lo!r},{self.hi!r},"
+                f"{int(self.incl_lo)},{int(self.incl_hi)})")
+
+    def render(self) -> str:
+        f = self.field
+        if self.lo is not None and self.hi is not None:
+            if self.lo == self.hi and self.incl_lo and self.incl_hi:
+                return f"{f} = {self.lo!r}"
+            lo_op = ">=" if self.incl_lo else ">"
+            hi_op = "<=" if self.incl_hi else "<"
+            return (f"({f} {lo_op} {self.lo!r} AND {f} {hi_op} "
+                    f"{self.hi!r})")
+        if self.lo is not None:
+            return f"{f} {'>=' if self.incl_lo else '>'} {self.lo!r}"
+        return f"{f} {'<=' if self.incl_hi else '<'} {self.hi!r}"
+
+    def matches(self, seq, attrs=None) -> bool:
+        if attrs is None:
+            raise ValueError(
+                f"attribute predicate {self.key()} needs the record's "
+                f"attribute dict (matches(seq, attrs))")
+        v = attrs.get(self.field)
+        if v is None or isinstance(v, bool):
+            return False
+        try:
+            x = float(v)
+        except (TypeError, ValueError):
+            return False
+        if self.lo is not None and (x < self.lo or
+                                    (x == self.lo and not self.incl_lo)):
+            return False
+        if self.hi is not None and (x > self.hi or
+                                    (x == self.hi and not self.incl_hi)):
+            return False
+        return True
 
 
 class And(Predicate):
@@ -158,8 +323,11 @@ class And(Predicate):
     def key(self) -> str:
         return "AND(" + ",".join(c.key() for c in self.children) + ")"
 
-    def matches(self, seq) -> bool:
-        return all(c.matches(seq) for c in self.children)
+    def render(self) -> str:
+        return "(" + " AND ".join(c.render() for c in self.children) + ")"
+
+    def matches(self, seq, attrs=None) -> bool:
+        return all(c.matches(seq, attrs) for c in self.children)
 
 
 class Or(Predicate):
@@ -169,8 +337,11 @@ class Or(Predicate):
     def key(self) -> str:
         return "OR(" + ",".join(c.key() for c in self.children) + ")"
 
-    def matches(self, seq) -> bool:
-        return any(c.matches(seq) for c in self.children)
+    def render(self) -> str:
+        return "(" + " OR ".join(c.render() for c in self.children) + ")"
+
+    def matches(self, seq, attrs=None) -> bool:
+        return any(c.matches(seq, attrs) for c in self.children)
 
 
 class Not(Predicate):
@@ -180,8 +351,11 @@ class Not(Predicate):
     def key(self) -> str:
         return f"NOT({self.child.key()})"
 
-    def matches(self, seq) -> bool:
-        return not self.child.matches(seq)
+    def render(self) -> str:
+        return f"NOT {self.child.render()}"
+
+    def matches(self, seq, attrs=None) -> bool:
+        return not self.child.matches(seq, attrs)
 
 
 # ===================================================================== #
@@ -196,7 +370,12 @@ _KEYWORDS = {"AND", "OR", "NOT", "LIKE", "CONTAINS"}
 
 
 def _tokenize(text: str) -> List[Tuple[str, str]]:
-    """[(kind, value)] with kind in {kw, lit, lparen, rparen}."""
+    """[(kind, value)] with kind in {kw, lit, qlit, lparen, rparen, op}.
+
+    ``qlit`` is a quoted literal — embedded quotes double SQL-style
+    (``'it''s'`` is the literal ``it's``), so any character sequence is
+    expressible.  ``op`` is a comparison operator (= != < <= > >=); a
+    bare ``!`` stays part of a word."""
     toks: List[Tuple[str, str]] = []
     i, n = 0, len(text)
     while i < n:
@@ -210,14 +389,37 @@ def _tokenize(text: str) -> List[Tuple[str, str]]:
             toks.append(("rparen", c))
             i += 1
         elif c == "'":
-            j = text.find("'", i + 1)
-            if j < 0:
-                raise PredicateSyntaxError(f"unterminated quote at {i}")
-            toks.append(("lit", text[i + 1:j]))
-            i = j + 1
+            j = i + 1
+            buf: List[str] = []
+            while True:
+                nxt = text.find("'", j)
+                if nxt < 0:
+                    raise PredicateSyntaxError(f"unterminated quote at {i}")
+                if nxt + 1 < n and text[nxt + 1] == "'":
+                    buf.append(text[j:nxt + 1])   # keep ONE of the pair
+                    j = nxt + 2
+                else:
+                    buf.append(text[j:nxt])
+                    j = nxt + 1
+                    break
+            toks.append(("qlit", "".join(buf)))
+            i = j
+        elif c in "=<>":
+            if c in "<>" and i + 1 < n and text[i + 1] == "=":
+                toks.append(("op", c + "="))
+                i += 2
+            else:
+                toks.append(("op", c))
+                i += 1
+        elif c == "!" and i + 1 < n and text[i + 1] == "=":
+            toks.append(("op", "!="))
+            i += 2
         else:
             j = i
-            while j < n and not text[j].isspace() and text[j] not in "()'":
+            while (j < n and not text[j].isspace()
+                   and text[j] not in "()'=<>"
+                   and not (text[j] == "!" and j + 1 < n
+                            and text[j + 1] == "=")):
                 j += 1
             word = text[i:j]
             toks.append(("kw", word) if word in _KEYWORDS else ("lit", word))
@@ -271,40 +473,90 @@ class _Parser:
             return node
         if kind == "kw" and val == "LIKE":
             k2, v2 = self.take()
-            if k2 != "lit":
+            if k2 not in ("lit", "qlit"):
                 raise PredicateSyntaxError("LIKE expects a pattern literal")
             return Like(v2)
         if kind == "kw" and val == "CONTAINS":
             k2, v2 = self.take()
-            if k2 != "lit":
+            if k2 not in ("lit", "qlit"):
                 raise PredicateSyntaxError(
                     "CONTAINS expects a pattern literal")
             return Contains(v2)
-        if kind == "lit":
+        if kind == "lit" and self.peek() is not None \
+                and self.peek()[0] == "op":
+            _, op = self.take()
+            k2, v2 = self.take()
+            if k2 not in ("lit", "qlit"):
+                raise PredicateSyntaxError(
+                    f"comparison '{val} {op}' expects a value literal")
+            return _comparison(val, op, v2, quoted=(k2 == "qlit"))
+        if kind in ("lit", "qlit"):
             return Contains(val)
         raise PredicateSyntaxError(f"unexpected token {val!r}")
 
 
+def _comparison(field: str, op: str, value: str, quoted: bool) -> Predicate:
+    """``field op value`` → a Tag/Range leaf.  A quoted RHS is always a
+    tag value; an unquoted RHS that parses as a number is numeric."""
+    num: Optional[float] = None
+    if not quoted:
+        try:
+            num = float(value)
+        except ValueError:
+            num = None
+    if op in ("<", "<=", ">", ">="):
+        if num is None:
+            raise PredicateSyntaxError(
+                f"'{field} {op} {value}' needs a numeric literal "
+                f"(quote tag values and compare with = / !=)")
+        if op == "<":
+            return Range(field, None, num, incl_hi=False)
+        if op == "<=":
+            return Range(field, None, num, incl_hi=True)
+        if op == ">":
+            return Range(field, num, None, incl_lo=False)
+        return Range(field, num, None, incl_lo=True)
+    node: Predicate = (Range(field, num, num) if num is not None
+                       else Tag(field, (value,)))
+    return node if op == "=" else Not(node)
+
+
+_QUOTING_HINT = (
+    "quote literal patterns containing grammar characters (quotes, "
+    "parentheses, comparison operators, or standalone uppercase "
+    "keywords), e.g. CONTAINS 'a(b' — write a literal quote by "
+    "doubling it: 'it''s'")
+
+
 def parse_predicate(text: str) -> Predicate:
     """Parse a request string.  Strings containing no predicate syntax
-    (no uppercase keyword, quote, or parenthesis) are CONTAINS patterns
-    taken verbatim — the pre-predicate request shape.  A literal pattern
-    that happens to contain a standalone uppercase keyword must be quoted
-    (``CONTAINS 'NOT A DRILL'``) or passed as ``Contains(...)``."""
+    (no uppercase keyword, quote, parenthesis, or comparison operator)
+    are CONTAINS patterns taken verbatim — the pre-predicate request
+    shape.  A literal pattern that happens to contain grammar characters
+    must be quoted (``CONTAINS 'NOT A DRILL'``) or passed as
+    ``Contains(...)``; both parentheses are treated symmetrically."""
     if not isinstance(text, str):
         return Contains(text)
     if not (any(k in text for k in _KEYWORDS) or "'" in text
-            or "(" in text or ")" in text):
+            or "(" in text or ")" in text
+            or "=" in text or "<" in text or ">" in text):
         return Contains(text)
     toks = _tokenize(text)
-    if not any(k == "kw" for k, _ in toks) and "'" not in text \
-            and "(" not in text:
+    # Keyword substrings inside ordinary words ("bAND cd") tokenize to
+    # plain lits: still a verbatim CONTAINS.  Any real grammar token —
+    # keyword, EITHER paren, operator — or a quote means the string must
+    # parse as a predicate (or be quoted by the caller).
+    if not any(k in ("kw", "op", "lparen", "rparen") for k, _ in toks) \
+            and "'" not in text:
         return Contains(text)
     p = _Parser(toks)
-    node = p.expr()
-    if p.peek() is not None:
-        raise PredicateSyntaxError(
-            f"trailing tokens after predicate: {p.toks[p.pos:]}")
+    try:
+        node = p.expr()
+        if p.peek() is not None:
+            raise PredicateSyntaxError(
+                f"trailing tokens after predicate: {p.toks[p.pos:]}")
+    except PredicateSyntaxError as e:
+        raise PredicateSyntaxError(f"{e}; {_QUOTING_HINT}") from None
     return node
 
 
@@ -349,12 +601,42 @@ def _nnf(p: Predicate, neg: bool = False) -> Predicate:
     return Not(p) if neg else p
 
 
+def _merge_range_conjuncts(ch: List[Predicate]) -> List[Predicate]:
+    """Same-field Range conjuncts intersect into one leaf, so a two-sided
+    comparison (``price >= 3 AND price <= 12``) compiles to a single rank
+    window over the attribute segment (descriptor execution) instead of a
+    masked scan.  A contradictory intersection yields an inverted-interval
+    Range that matches nothing — the compiler drops it as empty."""
+    by_field: Dict[str, List[Range]] = {}
+    rest: List[Predicate] = []
+    for c in ch:
+        if isinstance(c, Range):
+            by_field.setdefault(c.field, []).append(c)
+        else:
+            rest.append(c)
+    for f, rs in by_field.items():
+        if len(rs) == 1:
+            rest.append(rs[0])
+            continue
+        lo, incl_lo, hi, incl_hi = None, True, None, True
+        for r in rs:
+            if r.lo is not None and (lo is None or r.lo > lo or
+                                     (r.lo == lo and not r.incl_lo)):
+                lo, incl_lo = r.lo, r.incl_lo
+            if r.hi is not None and (hi is None or r.hi < hi or
+                                     (r.hi == hi and not r.incl_hi)):
+                hi, incl_hi = r.hi, r.incl_hi
+        rest.append(Range(f, lo, hi, incl_lo, incl_hi))
+    return rest
+
+
 def _flatten(p: Predicate) -> Predicate:
     """And(And(..)) / Or(Or(..)) collapse; single-child nodes unwrap."""
     if isinstance(p, And):
         ch: List[Predicate] = []
         for c in (_flatten(c) for c in p.children):
             ch.extend(c.children if isinstance(c, And) else [c])
+        ch = _merge_range_conjuncts(ch)
         return ch[0] if len(ch) == 1 else And(ch)
     if isinstance(p, Or):
         ch = []
@@ -391,6 +673,13 @@ class CompiledSource:
     delta_ids: Optional[np.ndarray] = None       # post-freeze inserts to
                                                  # brute-force alongside the
                                                  # frozen cover (write path)
+    attr_ranges: List[Tuple[int, int, int]] = field(default_factory=list)
+                                                 # (pseudo_state, rank_lo,
+                                                 # rank_hi): a PARTIAL slice
+                                                 # of an attribute segment —
+                                                 # the sharded planner turns
+                                                 # it into per-shard
+                                                 # descriptor columns
 
 
 @dataclass
@@ -423,6 +712,7 @@ class _Ctx:
         self.n_frozen = runtime.n_states
         self._mask_cache: Dict[int, np.ndarray] = {}
         self._delta_cache: Dict[int, np.ndarray] = {}
+        self._attr_mask_cache: Dict[str, np.ndarray] = {}
 
     def walk(self, pattern) -> int:
         return self.esam.walk(pattern)
@@ -457,6 +747,82 @@ class _Ctx:
             self._mask_cache[state] = m
         return m
 
+    # -------------------------------------------------------------- #
+    # attribute leaves (Tag / Range) against the frozen per-attribute
+    # sorted-ID segments (PackedRuntime.attr_num / attr_tag) plus the
+    # live delta tail
+    # -------------------------------------------------------------- #
+    def attr_field(self, node) -> str:
+        schema = getattr(self.rt, "attr_schema", None) or {}
+        want = "tag" if isinstance(node, Tag) else "numeric"
+        if not schema:
+            raise ValueError(
+                f"attribute predicate {node.key()} needs a typed schema: "
+                f"declare the field in VectorMatonConfig.schema")
+        got = schema.get(node.field)
+        if got is None:
+            raise ValueError(
+                f"unknown attribute field {node.field!r}: declare it in "
+                f"VectorMatonConfig.schema (have {sorted(schema)})")
+        if got != want:
+            raise ValueError(
+                f"attribute field {node.field!r} is typed {got!r} in the "
+                f"schema but the predicate uses it as {want!r}")
+        return node.field
+
+    def attr_segments(self, node) -> Tuple[
+            List[Tuple[int, int]], List[int],
+            List[Tuple[int, int, int]], int]:
+        """Frozen lowering of one attribute leaf: (global CSR segments,
+        full pseudo-states, partial (state, rank_lo, rank_hi) ranges,
+        frozen member count)."""
+        field_name = self.attr_field(node)
+        ptr = self.rt.base_ptr
+        if isinstance(node, Tag):
+            tmap = getattr(self.rt, "attr_tag", {}).get(field_name, {})
+            segs, states = [], []
+            for v in node.values:
+                u = tmap.get(v)
+                if u is None:
+                    continue
+                lo, hi = int(ptr[u]), int(ptr[u + 1])
+                if hi > lo:
+                    segs.append((lo, hi))
+                    states.append(u)
+            return segs, states, [], sum(h - l for l, h in segs)
+        u, vals = getattr(self.rt, "attr_num", {}).get(
+            field_name, (None, None))
+        if u is None:
+            return [], [], [], 0
+        a = (0 if node.lo is None else int(np.searchsorted(
+            vals, node.lo, side="left" if node.incl_lo else "right")))
+        b = (len(vals) if node.hi is None else int(np.searchsorted(
+            vals, node.hi, side="right" if node.incl_hi else "left")))
+        if b <= a:
+            return [], [], [], 0
+        lo, hi = int(ptr[u]) + a, int(ptr[u]) + b
+        return [(lo, hi)], [], [(int(u), a, b)], b - a
+
+    def attr_delta_ids(self, node) -> np.ndarray:
+        """Post-freeze inserts whose attributes satisfy the leaf."""
+        attrs = getattr(self.rt, "attributes", None) or []
+        n0 = self.rt.delta.n_base
+        out = [i for i in range(n0, self.n)
+               if node.matches(None, attrs[i] if i < len(attrs) else {})]
+        return np.asarray(out, dtype=np.int64)
+
+    def attr_mask(self, node) -> np.ndarray:
+        key = node.key()
+        m = self._attr_mask_cache.get(key)
+        if m is None:
+            segs, _, _, _ = self.attr_segments(node)
+            m = np.zeros(self.n, dtype=bool)
+            for lo, hi in segs:
+                m[self.rt.base_ids[lo:hi]] = True
+            m[self.attr_delta_ids(node)] = True
+            self._attr_mask_cache[key] = m
+        return m
+
 
 def _node_mask(node: Predicate, ctx: _Ctx) -> Tuple[np.ndarray, bool]:
     """(superset mask of the node's members, exact?).  The mask is always a
@@ -479,6 +845,8 @@ def _node_mask(node: Predicate, ctx: _Ctx) -> Tuple[np.ndarray, bool]:
             lm = ctx.cover_mask(st)
             m = lm.copy() if m is None else (m & lm)
         return m, False
+    if isinstance(node, (Tag, Range)):
+        return ctx.attr_mask(node), True
     if isinstance(node, Not):
         m, exact = _node_mask(node.child, ctx)
         if exact:
@@ -621,12 +989,33 @@ def _like_source(node: Like, ctx: _Ctx) -> Optional[CompiledSource]:
                           verify=node, est=len(ids))
 
 
+def _attr_source(node: Predicate, ctx: _Ctx) -> Optional[CompiledSource]:
+    """A bare Tag/Range disjunct rides the chain machinery: its frozen
+    members are contiguous slices of the per-attribute sorted-ID segments
+    in the resident CSR, so the warm path executes as (seg_start,
+    seg_len, owner) descriptors with ZERO candidate-id upload — a Range
+    is a single rank slice of one pseudo-state, a Tag is one full
+    pseudo-state segment per value.  Post-freeze inserts join as a
+    brute-forced delta tail, same as chain covers."""
+    segs, states, ranges, frozen_size = ctx.attr_segments(node)
+    delta = ctx.attr_delta_ids(node)
+    if frozen_size + len(delta) == 0:
+        return None
+    return CompiledSource(strategy="chain", anchor=-1,
+                          segments=segs, seg_states=states,
+                          raw_segments=segs, attr_ranges=ranges,
+                          delta_ids=delta if len(delta) else None,
+                          est=frozen_size + len(delta))
+
+
 def _compile_disjunct(node: Predicate, ctx: _Ctx
                       ) -> Optional[CompiledSource]:
     if isinstance(node, Contains):
         return _contains_source(node, ctx)
     if isinstance(node, Like):
         return _like_source(node, ctx)
+    if isinstance(node, (Tag, Range)):
+        return _attr_source(node, ctx)
     if isinstance(node, And):
         return _and_source(node, ctx)
     if isinstance(node, Not):

@@ -80,6 +80,12 @@ class VectorMatonConfig:
     compact_min_inserts: int = 256
     compact_ratio: float = 0.25
     auto_compact: bool = True
+    # typed attribute schema (DESIGN.md §9): field name -> 'tag' | 'numeric'.
+    # Declared fields are indexed at freeze/compact into per-attribute
+    # sorted-ID CSR segments and become queryable via comparison syntax
+    # ("genre = 'rock' AND price < 10"); undeclared fields raise at
+    # predicate compile time.  None = no structured attributes.
+    schema: Optional[Dict[str, str]] = None
 
 
 @dataclass
@@ -104,14 +110,30 @@ class VectorMaton:
 
     def __init__(self, vectors: np.ndarray, sequences: Sequence[Sequence],
                  config: Optional[VectorMatonConfig] = None,
-                 workers: int = 1) -> None:
+                 workers: int = 1,
+                 attributes: Optional[Sequence[Dict]] = None) -> None:
         self.config = config or VectorMatonConfig()
+        for f, kind in (self.config.schema or {}).items():
+            if kind not in ("tag", "numeric"):
+                raise ValueError(
+                    f"schema field {f!r}: unknown type {kind!r} "
+                    f"(expected 'tag' or 'numeric')")
         self.vectors = vectors                   # adopted into a VectorStore
         self.esam = ESAM()
         self.inherit: List[int] = []
         self.state_index: List[Optional[_StateIndex]] = []
         self.deleted: set = set()
         self.sequences: List = list(sequences)   # LIKE residual verification
+        if attributes is not None and len(attributes) != len(sequences):
+            raise ValueError(
+                f"attributes ({len(attributes)}) must align with "
+                f"sequences ({len(sequences)})")
+        # one dict per record; schema-declared fields are type-coerced so
+        # the frozen sorted arrays and host verification agree exactly
+        self.attributes: List[Dict] = [
+            self._norm_attrs(a) for a in (attributes or [])]
+        self.attributes.extend({} for _ in range(
+            len(self.sequences) - len(self.attributes)))
         self._lock = threading.Lock()
         self._compact_lock = threading.Lock()
         self.runtime_builds = 0                  # full re-flatten count
@@ -122,6 +144,16 @@ class VectorMaton:
         self.esam.finalize()
         self._build_state_indexes(workers=workers)
         self._runtime: Optional[PackedRuntime] = self._build_runtime()
+
+    def _norm_attrs(self, attrs: Optional[Dict]) -> Dict:
+        """Coerce schema-declared fields (numeric -> float, tag -> str) so
+        frozen sorted arrays, delta evaluation, and host verification all
+        compare the same representation; undeclared keys pass through."""
+        out = dict(attrs or {})
+        for f, kind in (self.config.schema or {}).items():
+            if f in out:
+                out[f] = float(out[f]) if kind == "numeric" else str(out[f])
+        return out
 
     # ------------------------------------------------------------------ #
     # vector storage (growable, capacity-doubling — DESIGN.md §4)
@@ -345,7 +377,8 @@ class VectorMaton:
     # maintenance (paper §5)
     # ------------------------------------------------------------------ #
 
-    def insert(self, vector: np.ndarray, sequence: Sequence) -> int:
+    def insert(self, vector: np.ndarray, sequence: Sequence,
+               attributes: Optional[Dict] = None) -> int:
         """Online insert: extend automaton; patch base indexes of affected
         states.  New states index only the new ID (their V starts at {i});
         clones rebuild their base against the current best successor —
@@ -362,6 +395,10 @@ class VectorMaton:
         frozen generation cannot see)."""
         i = self.esam.num_sequences
         self.sequences.append(sequence)
+        # the delta row's attributes ride the live list (the runtime
+        # shares it); attribute leaves pick them up at compile time via
+        # the post-freeze scan, so no per-state delta record is needed
+        self.attributes.append(self._norm_attrs(attributes))
         self._vec_store.append(vector)
         view = self.vectors
         for si in self.state_index:

@@ -53,6 +53,12 @@ def save_vectormaton(vm, path: str) -> None:
     np.save(os.path.join(tmp, "sequences.npy"),
             np.asarray(list(getattr(vm, "sequences", [])), dtype=object),
             allow_pickle=True)
+    # per-record attributes + typed schema: restored predicates on Tag /
+    # Range leaves re-derive the sorted attribute segments at rebuild
+    attrs = list(getattr(vm, "attributes", []))
+    if any(attrs) or getattr(vm.config, "schema", None):
+        np.save(os.path.join(tmp, "attributes.npy"),
+                np.asarray(attrs, dtype=object), allow_pickle=True)
     # state indexes: raw sets into one CSR; graphs into per-state npz
     raw_ptr = [0]
     raw_data: List[np.ndarray] = []
@@ -81,6 +87,8 @@ def save_vectormaton(vm, path: str) -> None:
                   else np.empty(0, np.int64)),
         deleted=np.asarray(sorted(vm.deleted), dtype=np.int64),
         graph_states=np.asarray(graph_states, dtype=np.int64),
+        schema=np.asarray(json.dumps(getattr(vm.config, "schema", None)
+                                     or {})),
         config=np.asarray([vm.config.T, vm.config.M, vm.config.ef_con,
                            0 if vm.config.metric == "l2" else 1,
                            int(vm.config.reuse), int(vm.config.skip_build),
@@ -129,12 +137,21 @@ def load_vectormaton(cls, path: str):
         config.compact_min_inserts = int(cfg_arr[8])
         config.compact_ratio = float(cfg_arr[9]) / 10_000
         config.auto_compact = bool(cfg_arr[10])
+    if "schema" in states:     # typed attribute schema (older lack it)
+        schema = json.loads(str(states["schema"]))
+        config.schema = schema or None
     vm = cls.__new__(cls)
     vm.config = config
     vm.vectors = np.load(os.path.join(path, "vectors.npy"))
     seq_path = os.path.join(path, "sequences.npy")
     vm.sequences = (np.load(seq_path, allow_pickle=True).tolist()
                     if os.path.exists(seq_path) else [])
+    attr_path = os.path.join(path, "attributes.npy")
+    vm.attributes = (np.load(attr_path, allow_pickle=True).tolist()
+                     if os.path.exists(attr_path)
+                     else [{} for _ in vm.sequences])
+    vm.attributes.extend({} for _ in range(
+        len(vm.sequences) - len(vm.attributes)))
     vm.esam = ESAM.from_arrays(esam_arrays)
     vm.esam.finalize()
     vm.inherit = states["inherit"].tolist()

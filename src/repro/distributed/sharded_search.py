@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import functools
 from collections import OrderedDict
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -108,14 +108,19 @@ class _EntrySpec:
     """Device-executable form of one plan entry against one residency.
 
     ``states``: frozen chain states whose covers run as per-shard CSR
-    descriptors (zero upload).  ``tails``: (shards, t_pad) local row ids
-    resident on device (-1 padding) — bitmap compositions, residual
-    survivors, resident delta ids — uploaded once and cached.  ``extra``:
-    qualified ids past the shard watermark, brute-forced host-side."""
+    descriptors (zero upload).  ``ranges``: partial attribute-segment
+    slices ``(pseudo_state, rank_lo, rank_hi)`` — a numeric Range leaf;
+    the dispatcher intersects the global rank window with each shard's
+    rank run to get per-shard descriptor columns (still zero upload).
+    ``tails``: (shards, t_pad) local row ids resident on device (-1
+    padding) — bitmap compositions, residual survivors, resident delta
+    ids — uploaded once and cached.  ``extra``: qualified ids past the
+    shard watermark, brute-forced host-side."""
     states: List[int]
     tails: Optional[jax.Array]
     t_pad: int
     extra: np.ndarray
+    ranges: List[Tuple[int, int, int]] = field(default_factory=list)
 
 
 class ShardedDeviceIndex:
@@ -177,8 +182,10 @@ class ShardedDeviceIndex:
         # shard s is then the descriptor (csr_ptr[s][u], length) per chain
         # state u — host-resolvable integers, never a mask.
         base_ids = np.asarray(runtime.base_ids, dtype=np.int64)
-        n_states = runtime.n_states
-        state_of = np.repeat(np.arange(n_states, dtype=np.int64),
+        # n_csr counts chain states PLUS the attribute pseudo-segments
+        # appended at build time — both address the same shard-local CSR
+        n_csr = len(runtime.base_ptr) - 1
+        state_of = np.repeat(np.arange(n_csr, dtype=np.int64),
                              np.diff(runtime.base_ptr))
         resident = base_ids < n
         ids_r, st_r = base_ids[resident], state_of[resident]
@@ -186,10 +193,10 @@ class ShardedDeviceIndex:
         local = (ids_r % self.local_n).astype(np.int32)
         # shard-major, state-minor, original order within — one stable sort
         order = np.lexsort((np.arange(len(ids_r)), st_r, owner))
-        per = np.bincount(owner * n_states + st_r,
-                          minlength=self.shards * n_states
-                          ).reshape(self.shards, n_states)
-        ptr = np.zeros((self.shards, n_states + 1), np.int64)
+        per = np.bincount(owner * n_csr + st_r,
+                          minlength=self.shards * n_csr
+                          ).reshape(self.shards, n_csr)
+        ptr = np.zeros((self.shards, n_csr + 1), np.int64)
         np.cumsum(per, axis=1, out=ptr[:, 1:])
         shard_len = ptr[:, -1]
         l_pad = ops.bucket(int(shard_len.max()) if len(ids_r) else 1, 8)
@@ -210,6 +217,26 @@ class ShardedDeviceIndex:
             ids_o, st_o = base_ids[~resident], state_of[~resident]
             for u in np.unique(st_o):
                 self._overflow[int(u)] = ids_o[st_o == u]
+        # ---- attribute pseudo-segments (DESIGN.md §9): a Range leaf is a
+        # RANK window [a, b) of one value-sorted segment.  The lexsort
+        # above is stable in original segment order, so within (shard,
+        # state) the shard-local run preserves ascending global rank —
+        # a global rank window is therefore CONTIGUOUS per shard, located
+        # by binary search over each shard's rank run.  Non-resident
+        # members keep their ranks so overflow respects the window too.
+        self._seg_ranks: Dict[int, List[np.ndarray]] = {}
+        self._rank_overflow: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        ptr_g = np.asarray(runtime.base_ptr, dtype=np.int64)
+        for u in range(runtime.n_states, n_csr):
+            lo, hi = int(ptr_g[u]), int(ptr_g[u + 1])
+            seg = base_ids[lo:hi]
+            ranks = np.arange(hi - lo, dtype=np.int64)
+            rm = seg < n
+            ow = seg[rm] // self.local_n
+            rr = ranks[rm]
+            self._seg_ranks[u] = [rr[ow == s] for s in range(self.shards)]
+            if not rm.all():
+                self._rank_overflow[u] = (ranks[~rm], seg[~rm])
         # (predicate key, delta version) -> _EntrySpec, LRU + stale purge
         self._pred_cache: "OrderedDict[Tuple, _EntrySpec]" = OrderedDict()
         # batch-signature -> concatenated tails (warm waves re-use the
@@ -258,12 +285,20 @@ class ShardedDeviceIndex:
             # delta, so the candidate pool carries no duplicates.
             s = srcs[0]
             states = list(s.seg_states)
+            ranges = [(int(u), int(a), int(b))
+                      for u, a, b in getattr(s, "attr_ranges", [])]
             delta = (np.asarray(s.delta_ids, np.int64)
                      if s.delta_ids is not None else _EMPTY_I)
             res = delta[delta < n]
             extras = [delta[delta >= n]]
             extras += [self._overflow[u] for u in states
                        if u in self._overflow]
+            # partial attr windows: only overflow ids whose RANK falls
+            # inside [a, b) qualify
+            for u, a, b in ranges:
+                if u in self._rank_overflow:
+                    rk, ids_o = self._rank_overflow[u]
+                    extras.append(ids_o[(rk >= a) & (rk < b)])
         else:
             # boolean composition / residual: the exact member set is
             # host-computed once (residual verification included) and the
@@ -272,6 +307,7 @@ class ShardedDeviceIndex:
             mask = self.rt.entry_mask(entry)
             ids = np.nonzero(mask)[0].astype(np.int64)
             states = []
+            ranges = []
             res = ids[ids < n]
             extras = [ids[ids >= n]]
         tails, t_pad = (self._upload_tails(res) if len(res)
@@ -280,7 +316,7 @@ class ShardedDeviceIndex:
                                                         extras)
                  else _EMPTY_I)
         return _EntrySpec(states=states, tails=tails, t_pad=t_pad,
-                          extra=extra)
+                          extra=extra, ranges=ranges)
 
     def _upload_tails(self, ids: np.ndarray) -> Tuple[jax.Array, int]:
         """Group explicit resident candidate ids by owning shard, rebase
@@ -644,6 +680,22 @@ def sharded_plan_dispatch(mesh: Mesh, base, runtime, queries, plan,
         for u in spec.states:
             dstart_cols.append(sh.csr_ptr[:, u])
             dlen_cols.append(sh.csr_ptr[:, u + 1] - sh.csr_ptr[:, u])
+            downer.append(oi)
+        for u, a, b in spec.ranges:
+            # partial attribute window: per shard, intersect the global
+            # rank window [a, b) with the shard's ascending rank run —
+            # the slice is contiguous in the shard-local CSR, so this is
+            # still a pure descriptor (two binary searches, zero upload)
+            runs = sh._seg_ranks[u]
+            starts = np.empty(sh.shards, np.int64)
+            lens = np.empty(sh.shards, np.int64)
+            for si in range(sh.shards):
+                lo_i = int(np.searchsorted(runs[si], a, side="left"))
+                hi_i = int(np.searchsorted(runs[si], b, side="left"))
+                starts[si] = sh.csr_ptr[si, u] + lo_i
+                lens[si] = hi_i - lo_i
+            dstart_cols.append(starts)
+            dlen_cols.append(lens)
             downer.append(oi)
         if spec.tails is not None:
             tail_parts.append((e.key, spec.tails, oi, spec.t_pad))

@@ -160,7 +160,8 @@ class ContinuousBatcher:
             return len(self._queue)
 
     # ------------------------------------------------------------------ #
-    def submit_insert(self, vector: np.ndarray, sequence: Sequence) -> int:
+    def submit_insert(self, vector: np.ndarray, sequence: Sequence,
+                      attributes: Optional[dict] = None) -> int:
         """Enqueue a write; applied at the head of the next wave (after a
         pipeline flush).  Returns a write ticket — once the wave that
         applies it has run, the assigned vector id is available in
@@ -168,7 +169,8 @@ class ContinuousBatcher:
         with self._lock:
             t = self._write_seq
             self._write_seq += 1
-            self._writes.append(("insert", t, vector, sequence))
+            self._writes.append(("insert", t, vector, sequence,
+                                 attributes))
             return t
 
     def submit_delete(self, vector_id: int) -> int:
@@ -205,8 +207,9 @@ class ContinuousBatcher:
         ids: List[int] = []
         for op in ops:
             if op[0] == "insert":
-                _, t, v, s = op
-                res = self.engine.insert(v, s)
+                _, t, v, s = op[:4]
+                attrs = op[4] if len(op) > 4 else None
+                res = self.engine.insert(v, s, attributes=attrs)
                 ids.append(res)
             elif op[0] == "delete":
                 _, t, res = op

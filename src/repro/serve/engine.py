@@ -94,9 +94,10 @@ class RetrievalEngine:
 
     def __init__(self, vectors: np.ndarray, sequences: Sequence[str],
                  config: Optional[VectorMatonConfig] = None,
-                 workers: int = 1, mesh=None, shard_axis: str = "data"):
+                 workers: int = 1, mesh=None, shard_axis: str = "data",
+                 attributes=None):
         self.index = VectorMaton(vectors, sequences, config,
-                                 workers=workers)
+                                 workers=workers, attributes=attributes)
         self.mesh = mesh
         self.shard_axis = shard_axis
         # Serializes host-state mutation: planning (snapshot + predicate
@@ -209,14 +210,16 @@ class RetrievalEngine:
         return out  # type: ignore[return-value]
 
     # ------------------------------------------------------------------ #
-    def insert(self, vector: np.ndarray, sequence: str) -> int:
+    def insert(self, vector: np.ndarray, sequence: str,
+               attributes: Optional[dict] = None) -> int:
         """Delta-runtime write: amortized O(d) append, auto-compacted per
         the index config's threshold (VectorMaton.maybe_compact).  Bumps
         the delta version, so any in-flight WavePlan becomes stale and
         the pipeline replans it — the lock only serializes the write
         itself against planning/dispatch."""
         with self._lock:
-            return self.index.insert(vector, sequence)
+            return self.index.insert(vector, sequence,
+                                     attributes=attributes)
 
     def delete(self, vector_id: int) -> None:
         with self._lock:

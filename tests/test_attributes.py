@@ -1,0 +1,274 @@
+"""Hybrid structured predicates (PR 8): typed tag/numeric attributes
+composed with patterns — exactness vs the brute-force oracle on both
+backends, through the write path, the sharded executor, the pipelined
+serving loop, and checkpoint restore; plus the zero-candidate-byte
+guarantee for warm attribute descriptors."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.predicate import parse_predicate
+from repro.core.vectormaton import VectorMaton, VectorMatonConfig
+from repro.serve.batching import ContinuousBatcher
+from repro.serve.engine import Request, RetrievalEngine
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+GENRES = ["rock", "jazz", "pop"]
+SCHEMA = {"genre": "tag", "price": "numeric"}
+
+HYBRID_PREDS = [
+    "genre = 'rock'",
+    "price < 5",
+    "price >= 3 AND price <= 12",
+    "CONTAINS 'ab' AND genre = 'jazz'",
+    "LIKE '%a_b%' AND price < 10",
+    "genre != 'pop' AND CONTAINS 'b'",
+    "(genre = 'rock' OR genre = 'jazz') AND price > 2",
+    "NOT genre = 'rock'",
+    "price = 0 OR CONTAINS 'abc'",
+]
+
+
+def _make(n=300, dim=16, seed=0, backend="numpy", T=10 ** 9, **cfg):
+    rng = np.random.default_rng(seed)
+    vecs = rng.standard_normal((n, dim)).astype(np.float32)
+    seqs = ["".join(rng.choice(list("abcd"), size=rng.integers(4, 12)))
+            for _ in range(n)]
+    attrs = [{"genre": GENRES[int(rng.integers(0, 3))],
+              "price": float(np.round(rng.uniform(0, 20), 2))}
+             for _ in range(n)]
+    vm = VectorMaton(vecs, seqs,
+                     VectorMatonConfig(T=T, backend=backend, schema=SCHEMA,
+                                       auto_compact=False, **cfg),
+                     attributes=attrs)
+    return vm, rng
+
+
+def _oracle(vm, pred, vq, k):
+    ids = np.asarray([i for i in range(len(vm.sequences))
+                      if i not in vm.deleted
+                      and pred.matches(vm.sequences[i], vm.attributes[i])],
+                     dtype=np.int64)
+    if not len(ids):
+        return []
+    d = ((vm.vectors[ids] - vq) ** 2).sum(1)
+    return ids[np.argsort(d, kind="stable")[:k]].tolist()
+
+
+def _check_all(vm, rng, k=10, tag=""):
+    vq = rng.standard_normal(vm.vectors.shape[1]).astype(np.float32)
+    for ptxt in HYBRID_PREDS:
+        pred = parse_predicate(ptxt)
+        d, ids = vm.query(vq, pred, k)
+        want = _oracle(vm, pred, vq, k)
+        assert ids.tolist() == want, (tag, ptxt, ids.tolist(), want)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_hybrid_oracle_frozen_delta_compacted(backend):
+    """Tag/Range composed with CONTAINS/LIKE: bit-exact top-k vs the
+    brute-force oracle — frozen, mid-delta, and post-compaction."""
+    vm, rng = _make(backend=backend)
+    _check_all(vm, rng, tag="frozen")
+    for i in range(40):
+        vm.insert(rng.standard_normal(16).astype(np.float32),
+                  "".join(rng.choice(list("abcd"), size=8)),
+                  attributes={"genre": GENRES[i % 3], "price": float(i)})
+    _check_all(vm, rng, tag="mid-delta")
+    vm.delete(3)
+    vm.delete(len(vm.sequences) - 2)       # one frozen, one delta tombstone
+    _check_all(vm, rng, tag="deleted")
+    vm.compact()
+    _check_all(vm, rng, tag="compacted")
+
+
+def test_attr_insert_without_attributes_defaults_empty():
+    """Inserts without attributes never match attribute filters but stay
+    reachable through pure pattern predicates."""
+    vm, rng = _make(n=60)
+    vm.insert(np.zeros(16, np.float32), "abab")
+    _check_all(vm, rng, tag="plain-insert")
+
+
+def test_range_warm_path_zero_candidate_bytes():
+    """Warm repeated Range predicates execute as resident-CSR rank-window
+    descriptors: NO candidate-id upload (the traffic counter the
+    acceptance gate reads)."""
+    vm, rng = _make(backend="jax")
+    rt = vm.runtime
+    vq = rng.standard_normal((1, 16)).astype(np.float32)
+    for ptxt in ["price >= 3 AND price <= 12", "price < 5",
+                 "genre = 'rock'"]:
+        plan = vm.plan([parse_predicate(ptxt)])
+        rt.execute(vq, plan, 10)           # cold: compile + upload
+        b0 = vm.maintenance_stats()["traffic_candidate_id_bytes"]
+        for _ in range(3):
+            plan = vm.plan([parse_predicate(ptxt)])
+            rt.execute(vq, plan, 10)
+        b1 = vm.maintenance_stats()["traffic_candidate_id_bytes"]
+        assert b1 == b0, (ptxt, b0, b1)
+    assert rt.stats()["attr_segments"] > 0
+
+
+def test_schema_validation_errors():
+    vm, _ = _make(n=40)
+    with pytest.raises(ValueError, match="schema"):
+        vm.query(np.zeros(16, np.float32),
+                 parse_predicate("color = 'red'"), 5)
+    with pytest.raises(ValueError, match="numeric"):
+        vm.query(np.zeros(16, np.float32),
+                 parse_predicate("genre < 5"), 5)
+    with pytest.raises(ValueError):
+        VectorMaton(np.zeros((1, 4), np.float32), ["a"],
+                    VectorMatonConfig(schema={"x": "bogus"}))
+    rng = np.random.default_rng(0)
+    vecs = rng.standard_normal((8, 4)).astype(np.float32)
+    vm2 = VectorMaton(vecs, ["abcd"] * 8, VectorMatonConfig())  # no schema
+    with pytest.raises(ValueError, match="schema"):
+        vm2.query(vecs[0], parse_predicate("price < 5"), 3)
+
+
+def test_pred_cache_invalidation_on_attributed_insert():
+    """An insert with attributes bumps the delta version, so a cached
+    attribute predicate recompiles and sees the new record."""
+    vm, rng = _make(n=80)
+    probe = np.zeros(16, np.float32)
+    pred = parse_predicate("genre = 'rock' AND price < 1")
+    d, ids = vm.query(probe, pred, 5)
+    vm.insert(probe, "zzzz", attributes={"genre": "rock", "price": 0.5})
+    new_id = len(vm.sequences) - 1
+    d2, ids2 = vm.query(probe, pred, 5)
+    assert ids2[0] == new_id, (ids.tolist(), ids2.tolist())
+
+
+def test_hybrid_through_pipelined_serving():
+    """Attribute predicates and attributed writes through the pipelined
+    batcher: every response exact for its own request."""
+    rng = np.random.default_rng(5)
+    n, dim = 150, 16
+    seqs = ["".join(rng.choice(list("abcd"), size=rng.integers(5, 12)))
+            for _ in range(n)]
+    attrs = [{"genre": GENRES[int(rng.integers(0, 3))],
+              "price": float(np.round(rng.uniform(0, 20), 2))}
+             for _ in range(n)]
+    vecs = rng.standard_normal((n, dim)).astype(np.float32)
+    eng = RetrievalEngine(vecs, seqs,
+                          VectorMatonConfig(schema=SCHEMA,
+                                            auto_compact=False),
+                          attributes=attrs)
+    b = ContinuousBatcher(eng, budget=10 ** 9, max_wave=4, pipeline=True)
+    probe = rng.standard_normal(dim).astype(np.float32)
+    b.submit_insert(probe, "abab",
+                    attributes={"genre": "jazz", "price": 3.0})
+    preds = ["genre = 'jazz' AND price <= 3", "price > 15",
+             "ab AND genre = 'rock'", "LIKE '%a%b%' AND price < 10"]
+    tickets = [b.submit(Request(vector=probe, pattern=p, k=4))
+               for p in preds]
+    res = b.drain()
+    b.close()
+    assert eng.index.attributes[-1] == {"genre": "jazz", "price": 3.0}
+    for t, p in zip(tickets, preds):
+        want = _oracle(eng.index, parse_predicate(p), probe, 4)
+        assert res[t].ids.tolist() == want, (p, res[t].ids.tolist(), want)
+
+
+def test_checkpoint_roundtrip_preserves_schema_and_attributes(tmp_path):
+    vm, rng = _make(n=100)
+    vm.insert(rng.standard_normal(16).astype(np.float32), "abcd",
+              attributes={"genre": "rock", "price": 1.5})
+    path = str(tmp_path / "ckpt")
+    vm.save(path)
+    vm2 = VectorMaton.load(path)
+    assert vm2.config.schema == SCHEMA
+    assert vm2.attributes == vm.attributes
+    _check_all(vm2, np.random.default_rng(9), tag="restored")
+
+
+def test_sharded_hybrid_oracle():
+    """Hybrid predicates through sharded_plan_topk on an 8-way host mesh:
+    cold, warm, mid-delta overflow, and post-compaction — all exact."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8")
+        import numpy as np
+        from repro.core.vectormaton import VectorMaton, VectorMatonConfig
+        from repro.core.predicate import parse_predicate
+        from repro.distributed.sharded_search import sharded_plan_topk
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(data=8, model=1)
+        rng = np.random.default_rng(7)
+        n, dim = 311, 16
+        genres = ["rock", "jazz", "pop"]
+        seqs = ["".join(rng.choice(list("abcd"),
+                                   size=rng.integers(5, 14)))
+                for _ in range(n)]
+        attrs = [{"genre": genres[int(rng.integers(0, 3))],
+                  "price": float(np.round(rng.uniform(0, 20), 2))}
+                 for _ in range(n)]
+        vecs = rng.standard_normal((n, dim)).astype(np.float32)
+        vm = VectorMaton(
+            vecs, seqs,
+            VectorMatonConfig(T=10 ** 9, auto_compact=False,
+                              schema={"genre": "tag",
+                                      "price": "numeric"}),
+            attributes=attrs)
+
+        def brute(ptext, q, k):
+            pred = parse_predicate(ptext)
+            ids = np.asarray(
+                [j for j in range(len(vm.sequences))
+                 if pred.matches(vm.sequences[j], vm.attributes[j])],
+                dtype=np.int64)
+            if not len(ids):
+                return []
+            dd = ((q[None, :] - vm.vectors[ids]) ** 2).sum(-1)
+            return ids[np.argsort(dd, kind="stable")[:k]].tolist()
+
+        rt = vm.snapshot()
+        rt.to_device_sharded(mesh, n=n)
+        for j in range(9):       # churn past the shard watermark
+            vm.insert(rng.standard_normal(dim).astype(np.float32),
+                      "".join(rng.choice(list("abcd"), size=8)),
+                      attributes={"genre": genres[j % 3],
+                                  "price": float(j)})
+
+        preds = ["genre = 'rock'",
+                 "price >= 3 AND price <= 12",
+                 "price < 2.5",
+                 "ab AND genre = 'jazz'",
+                 "LIKE '%a%b%' AND price < 10",
+                 "genre = 'pop' OR cd",
+                 "NOT genre = 'rock' AND a"]
+        queries = rng.standard_normal((len(preds), dim)).astype(
+            np.float32)
+        rt = vm.snapshot()
+        plan = vm.plan(preds, rt)
+        for trial in ("cold", "warm"):
+            res = sharded_plan_topk(mesh, n, rt, queries, plan, 5)
+            for r, p in enumerate(preds):
+                want = brute(p, queries[r], 5)
+                assert res[r][1].tolist() == want, (trial, p)
+
+        vm.compact()
+        rt2 = vm.snapshot()
+        plan2 = vm.plan(preds, rt2)
+        res = sharded_plan_topk(mesh, None, rt2, queries, plan2, 5)
+        for r, p in enumerate(preds):
+            want = brute(p, queries[r], 5)
+            assert res[r][1].tolist() == want, ("compacted", p)
+        print("sharded hybrid OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "sharded hybrid OK" in out.stdout

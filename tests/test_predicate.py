@@ -11,9 +11,9 @@ try:
 except ModuleNotFoundError:
     HAS_HYPOTHESIS = False
 
-from repro.core.predicate import (And, Contains, Like, Not, Or,
-                                  PredicateSyntaxError, as_predicate,
-                                  normalize, parse_predicate)
+from repro.core.predicate import (And, Contains, Like, Not, Or, Range,
+                                  Tag, PredicateSyntaxError, as_predicate,
+                                  normalize, parse_predicate, quote_literal)
 from repro.core.vectormaton import VectorMaton, VectorMatonConfig
 
 
@@ -146,6 +146,81 @@ def test_nnf_pushes_not_to_leaves():
     assert isinstance(p, Or)
     assert isinstance(p.children[0], Not)
     assert isinstance(p.children[1], Contains)
+
+
+# --------------------------------------------------------------------- #
+# grammar regressions: escaping bugfixes
+# --------------------------------------------------------------------- #
+
+def test_doubled_quote_escape():
+    """SQL-style '' inside a quoted literal is one literal quote (the
+    tokenizer used to close the literal at the first quote)."""
+    p = parse_predicate("CONTAINS 'it''s'")
+    assert isinstance(p, Contains) and p.pattern == "it's"
+    p = parse_predicate("'a''''b'")
+    assert isinstance(p, Contains) and p.pattern == "a''b"
+    p = parse_predicate("LIKE 'x''%'")
+    assert isinstance(p, Like) and p.pattern == "x'%"
+    assert p.matches("x'b") and not p.matches("xb")
+    # quote_literal emits the doubled form and round-trips
+    assert quote_literal("it's") == "'it''s'"
+    q = parse_predicate(f"CONTAINS {quote_literal(chr(39) * 3)}")
+    assert q.pattern == "'''"
+
+
+def test_like_escaped_wildcards():
+    r"""\% and \_ are literal characters, threaded through regex(),
+    literals(), and as_contains(); an escaped-%-only pattern must NOT
+    collapse to match-all."""
+    p = Like(r"\%")
+    assert p.matches("%") and not p.matches("abc") and not p.matches("")
+    assert p.literals() == ["%"]
+    p = Like(r"a\_b")
+    assert p.matches("a_b") and not p.matches("axb")
+    p = Like(r"%a\%b%")
+    assert p.literals() == ["a%b"]
+    assert p.as_contains() == Contains("a%b")
+    assert p.matches("xa%by") and not p.matches("xaZby")
+    p = Like(r"\\%")                       # escaped backslash then wildcard
+    assert p.matches("\\anything") and not p.matches("x")
+
+
+def test_fast_path_paren_symmetry_and_quoting_hint():
+    """Both paren orientations in an unquoted pattern are grammar errors
+    (the fast path used to pass ')' through verbatim but choke on '(');
+    the error tells the user how to quote."""
+    for bad in ["ab)cd", "(ab", "a(b", "ab)"]:
+        with pytest.raises(PredicateSyntaxError) as ei:
+            parse_predicate(bad)
+        assert "quote" in str(ei.value)
+        assert "''" in str(ei.value)       # the doubling example
+    # quoting makes the same text a verbatim CONTAINS
+    assert parse_predicate("'ab)cd'") == Contains("ab)cd")
+    assert parse_predicate("'(ab'") == Contains("(ab")
+    assert parse_predicate("'a=b'") == Contains("a=b")
+
+
+def test_comparison_parsing():
+    p = parse_predicate("genre = 'rock'")
+    assert p == Tag("genre", ("rock",))
+    p = parse_predicate("price < 10")
+    assert isinstance(p, Range) and p.hi == 10.0 and not p.incl_hi
+    assert p.lo is None
+    p = parse_predicate("price >= 2.5")
+    assert p.lo == 2.5 and p.incl_lo and p.hi is None
+    p = parse_predicate("price = 7")
+    assert isinstance(p, Range) and p.lo == p.hi == 7.0
+    p = parse_predicate("x != 'y'")
+    assert isinstance(p, Not) and p.child == Tag("x", ("y",))
+    # two-sided comparisons merge into ONE Range leaf (descriptor window)
+    p = normalize(parse_predicate("price >= 3 AND price <= 12"))
+    assert isinstance(p, Range) and (p.lo, p.hi) == (3.0, 12.0)
+    p = normalize(parse_predicate("price > 1 AND price >= 4 AND ab"))
+    rs = [c for c in p.children if isinstance(c, Range)]
+    assert len(rs) == 1 and rs[0].lo == 4.0 and rs[0].incl_lo
+    # ordered comparisons need a numeric RHS
+    with pytest.raises(PredicateSyntaxError):
+        parse_predicate("price < 'abc'")
 
 
 # --------------------------------------------------------------------- #
@@ -370,4 +445,51 @@ else:
     @pytest.mark.skip(reason="hypothesis not installed "
                              "(pip install -r requirements-dev.txt)")
     def test_random_predicates_match_bruteforce():
+        pass
+
+
+if HAS_HYPOTHESIS:
+    # literals that exercise every grammar hazard: quotes (doubled on
+    # render), parens, comparison chars, spaces, uppercase keywords
+    _lit_text = st.one_of(
+        st.text(alphabet="ab'()=<> _%\\", min_size=1, max_size=6),
+        st.sampled_from(["AND", "OR", "NOT", "LIKE", "CONTAINS", "it's"]))
+    _field = st.sampled_from(["genre", "price"])
+    _rt_leaf = st.one_of(
+        _lit_text.map(Contains),
+        _lit_text.map(Like),
+        st.tuples(_field, _lit_text).map(lambda t: Tag(t[0], (t[1],))),
+        st.tuples(_field,
+                  st.floats(allow_nan=False, allow_infinity=False,
+                            width=32),
+                  st.sampled_from(["lo", "hi", "eq"]),
+                  st.booleans()).map(
+            lambda t: Range(t[0], t[1], t[1]) if t[2] == "eq"
+            else Range(t[0], lo=t[1], incl_lo=t[3]) if t[2] == "lo"
+            else Range(t[0], hi=t[1], incl_hi=t[3])))
+
+    def _rt_tree(depth):
+        if depth == 0:
+            return _rt_leaf
+        sub = _rt_tree(depth - 1)
+        return st.one_of(
+            _rt_leaf,
+            st.lists(sub, min_size=2, max_size=3).map(And),
+            st.lists(sub, min_size=2, max_size=3).map(Or),
+            sub.map(Not))
+
+    @settings(max_examples=60, deadline=None)
+    @given(_rt_tree(2))
+    def test_render_reparse_roundtrip(pred):
+        """Any AST renders to grammar text that reparses to the same
+        canonical key — the property the three escaping bugs broke."""
+        text = pred.render()
+        back = parse_predicate(text)
+        assert back.key() == pred.key(), (text, back.key(), pred.key())
+        # and render is a fixed point from there on
+        assert parse_predicate(back.render()).key() == pred.key()
+else:
+    @pytest.mark.skip(reason="hypothesis not installed "
+                             "(pip install -r requirements-dev.txt)")
+    def test_render_reparse_roundtrip():
         pass
