@@ -86,4 +86,14 @@ python -m pytest -q tests/test_churn.py
 # BENCH_PR7.json is the committed trajectory, refreshed in place
 python -m benchmarks.bench_pipeline --smoke --baseline BENCH_PR7.json
 
+
+
+# replication gate (DESIGN.md §10): read scaling at 2 replicas vs 1
+# (>=1.6x; modeled device dwell stands in for cross-replica device
+# parallelism on single-core CI), zero lost/duplicated requests under an
+# injected kill, and failover recovery overhead under the bound; the
+# kill-a-replica-mid-churn bit-exactness gate itself runs in tier-1
+# (tests/test_fault_tolerance.py) and re-runs here to name itself
+python -m pytest -q tests/test_replication.py tests/test_fault_tolerance.py
+python -m benchmarks.bench_replica --smoke --baseline BENCH_PR9.json
 echo "ci.sh: all checks passed"

@@ -152,6 +152,11 @@ class DeltaRuntime:
         self.version = 0            # bumped per insert (pred-cache key)
         self.pending = 0            # inserts folded by the next compaction
         self.state_delta: Dict[int, List[int]] = {}
+        # post-freeze ids in arrival order: the replication delta log is
+        # extracted from this (extract_delta_records, DESIGN.md §10) —
+        # state_delta scatters ids per chain state, which loses the write
+        # order a follower must replay
+        self.inserted: List[int] = []
         # graphs born after the freeze — raw→graph promotions and HNSW
         # indexes built for post-freeze clone states.  They are invisible
         # to the frozen generation (not in graph_objs), so delete() must
@@ -169,6 +174,39 @@ class DeltaRuntime:
         are served from the live ESAM and are not recorded."""
         if state < self.n_states:
             self.state_delta.setdefault(state, []).append(vector_id)
+
+
+def extract_delta_records(vm) -> List[Dict]:
+    """Reify the live delta of ``vm``'s current generation as ordered
+    replication payloads (DESIGN.md §10).
+
+    One ``{'op': 'insert', ...}`` record per post-freeze id — carrying
+    the vector row (copied: the growable table may reallocate under the
+    caller), the sequence, and the attributes, in arrival order from
+    ``DeltaRuntime.inserted`` — followed by one ``{'op': 'delete', ...}``
+    per live tombstone (delete marks are idempotent, so replaying the
+    full set is exact even when some predate the freeze).
+
+    The write leader uses this to seed a replica-set delta log when
+    replication attaches to an index that already carries unfolded
+    writes: a follower bootstrapped from the attach-time checkpoint acks
+    the seeded watermark, and a later rejoiner restoring an older
+    checkpoint replays these records like any shipped batch.
+    """
+    rt = vm.runtime
+    out: List[Dict] = []
+    vectors = vm.vectors
+    for i in rt.delta.inserted:
+        out.append({
+            "op": "insert", "vector_id": int(i),
+            "vector": np.array(vectors[i]),
+            "sequence": vm.sequences[i],
+            "attributes": (dict(vm.attributes[i])
+                           if i < len(vm.attributes) else {}),
+        })
+    for vid in sorted(vm.deleted):
+        out.append({"op": "delete", "vector_id": int(vid)})
+    return out
 
 
 @dataclass

@@ -465,6 +465,7 @@ class VectorMaton:
                 delta.record(u, i)
         if delta is not None:
             delta.pending += 1
+            delta.inserted.append(i)             # replication delta log
             delta.version += 1                   # invalidates cached plans
         if self.config.auto_compact:
             self.maybe_compact()
@@ -629,9 +630,9 @@ class VectorMaton:
             "total_symbols": self.esam.total_symbols,
         }
 
-    def save(self, path: str) -> None:
+    def save(self, path: str, extra_meta: Optional[Dict] = None) -> None:
         from ..distributed.checkpoint import save_vectormaton
-        save_vectormaton(self, path)
+        save_vectormaton(self, path, extra_meta=extra_meta)
 
     @classmethod
     def load(cls, path: str) -> "VectorMaton":

@@ -39,12 +39,19 @@ import numpy as np
 # VectorMaton index checkpoints
 # --------------------------------------------------------------------- #
 
-def save_vectormaton(vm, path: str) -> None:
+def save_vectormaton(vm, path: str,
+                     extra_meta: Optional[Dict] = None) -> None:
     from ..core.vectormaton import _RAW
     tmp = path + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
+    if extra_meta is not None:
+        # caller-owned sidecar (e.g. the replication watermark a rejoining
+        # replica replays from, DESIGN.md §10).  Written inside the tmp
+        # dir so the atomic rename commits checkpoint + meta together.
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(extra_meta, f)
     np.savez_compressed(os.path.join(tmp, "esam.npz"),
                         **{k: v for k, v in vm.esam.to_arrays().items()})
     np.save(os.path.join(tmp, "vectors.npy"), vm.vectors)
@@ -116,6 +123,16 @@ def save_vectormaton(vm, path: str) -> None:
     if os.path.exists(path):
         shutil.rmtree(path)
     os.replace(tmp, path)
+
+
+def load_checkpoint_meta(path: str) -> Dict:
+    """The ``extra_meta`` sidecar a checkpoint was saved with ({} for
+    checkpoints written without one)."""
+    meta_path = os.path.join(path, "meta.json")
+    if not os.path.exists(meta_path):
+        return {}
+    with open(meta_path) as f:
+        return json.load(f)
 
 
 def load_vectormaton(cls, path: str):

@@ -57,6 +57,19 @@ class DrainTimeout(RuntimeError):
     admitted under the configured budget."""
 
 
+class RequestTimeout(RuntimeError):
+    """A dispatched wave did not deliver within the batcher's
+    per-request deadline (``request_timeout_s``) — the pipeline wedged
+    or a kernel hung.  Raised to the submitter instead of blocking it
+    forever; the affected requests are counted as ``dropped`` in
+    ``tenant_stats`` so the loss is observable.  ``tickets`` carries the
+    timed-out submission ids."""
+
+    def __init__(self, msg: str, tickets=()):
+        super().__init__(msg)
+        self.tickets = list(tickets)
+
+
 @dataclass(order=True)
 class _Queued:
     sort_key: Tuple
@@ -70,11 +83,12 @@ class _Queued:
 class _TenantState:
     """Per-tenant admission + latency bookkeeping."""
 
-    __slots__ = ("deficit", "served", "latencies")
+    __slots__ = ("deficit", "served", "dropped", "latencies")
 
     def __init__(self) -> None:
         self.deficit = 0.0
         self.served = 0
+        self.dropped = 0           # requests lost to RequestTimeout
         self.latencies: Deque[float] = deque(maxlen=512)
 
 
@@ -109,12 +123,17 @@ class ContinuousBatcher:
     def __init__(self, engine: RetrievalEngine, budget: int = 200_000,
                  max_wave: int = 64, max_defer: int = 4,
                  pipeline: bool = True,
-                 tenant_weights: Optional[Dict[str, float]] = None):
+                 tenant_weights: Optional[Dict[str, float]] = None,
+                 request_timeout_s: float = 120.0):
         self.engine = engine
         self.budget = budget
         self.max_wave = max_wave
         self.max_defer = max_defer
         self.pipeline = pipeline
+        # per-request delivery deadline: how long a submitter waits on a
+        # dispatched wave before the drop is recorded and RequestTimeout
+        # raised (was a hard-coded 120 s wait)
+        self.request_timeout_s = request_timeout_s
         self.tenant_weights: Dict[str, float] = dict(tenant_weights or {})
         self._queue: List[_Queued] = []
         self._seq = 0
@@ -423,7 +442,22 @@ class ContinuousBatcher:
 
     def _collect_jobs(self, jobs: List, out: Dict[int, Response]) -> None:
         for job, items in jobs:
-            results = job.wait(timeout=120.0)
+            try:
+                results = job.wait(timeout=self.request_timeout_s)
+            except TimeoutError:
+                # deadline blown: record the loss per tenant and surface
+                # a typed error instead of hanging the submitter on a
+                # wedged pipeline
+                with self._lock:
+                    for q in items:
+                        self._tenants.setdefault(
+                            q.request.tenant, _TenantState()).dropped += 1
+                jobs.clear()
+                raise RequestTimeout(
+                    f"wave of {len(items)} request(s) undelivered after "
+                    f"{self.request_timeout_s:.1f}s "
+                    f"(request_timeout_s deadline)",
+                    tickets=[q.seq for q in items]) from None
             t1 = time.perf_counter()
             for q, (d, i) in zip(items, results):
                 resp = Response(ids=i, distances=d,
@@ -513,6 +547,7 @@ class ContinuousBatcher:
                 stats[t] = {
                     "depth": depth.get(t, 0),
                     "served": ts.served,
+                    "dropped": ts.dropped,
                     "p50_ms": (float(np.percentile(lat, 50)) * 1e3
                                if len(lat) else 0.0),
                     "p99_ms": (float(np.percentile(lat, 99)) * 1e3

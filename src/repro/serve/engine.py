@@ -241,9 +241,20 @@ class RetrievalEngine:
             stats.update(self.pipeline_stats)
         return stats
 
-    def checkpoint(self, path: str) -> None:
+    def replication_token(self) -> Tuple[int, int]:
+        """(generation, delta_version) of the live runtime — the PR 3
+        write-path stamps that replication delta-log records carry
+        (DESIGN.md §10): followers check them for monotonicity, and the
+        router's staleness policy counts versions against them."""
         with self._lock:
-            self.index.save(path)
+            rt = self.index._runtime
+            return ((rt.generation, rt.delta.version) if rt is not None
+                    else (-1, -1))
+
+    def checkpoint(self, path: str,
+                   extra_meta: Optional[Dict] = None) -> None:
+        with self._lock:
+            self.index.save(path, extra_meta=extra_meta)
 
     @classmethod
     def restore(cls, path: str, mesh=None,

@@ -285,4 +285,5 @@ class PipelinedExecutor:
         if self._ring is not None:
             st["staging_grows"] = self._ring.grows
             st["staging_waits"] = self._ring.waits
+            st["staging_stalls"] = self._ring.stalls
         self.engine.pipeline_stats.update(st)

@@ -19,11 +19,29 @@ more than a full pipeline ahead.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class StagingStall(TimeoutError):
+    """A staging-slot lease timed out: every upload slot stayed leased
+    past the deadline, i.e. the fetch stage is not draining and the
+    pipeline is wedged.  Carries the ring depth and the observed wait so
+    the stall is diagnosable (and countable in ``maintenance_stats`` via
+    ``staging_stalls``) instead of surfacing as an anonymous
+    ``TimeoutError``."""
+
+    def __init__(self, depth: int, wait_ms: float):
+        super().__init__(
+            f"StagingRing.acquire: all {depth} upload slots leased after "
+            f"{wait_ms:.0f} ms — the fetch stage is not draining "
+            f"(pipeline stalled)")
+        self.depth = depth
+        self.wait_ms = wait_ms
 
 
 class StagingSlot:
@@ -65,19 +83,22 @@ class StagingRing:
         self._cv = threading.Condition()
         self.grows = 0          # observability: hot-path reallocations
         self.waits = 0          # acquire() calls that had to block
+        self.stalls = 0         # leases that timed out (StagingStall)
 
     def acquire(self, queries: np.ndarray,
                 timeout: Optional[float] = None) -> StagingSlot:
         q = np.asarray(queries, dtype=np.float32)
         n = q.shape[0]
+        t0 = time.perf_counter()
         with self._cv:
             if not self._free:
                 self.waits += 1
             if not self._cv.wait_for(lambda: bool(self._free),
                                      timeout=timeout):
-                raise TimeoutError(
-                    "StagingRing.acquire: both upload slots leased — the "
-                    "fetch stage is not draining (pipeline stalled)")
+                self.stalls += 1
+                raise StagingStall(
+                    depth=len(self._bufs),
+                    wait_ms=(time.perf_counter() - t0) * 1e3)
             idx = self._free.pop()
         buf = self._bufs[idx]
         if buf.shape[0] < n:

@@ -58,3 +58,191 @@ def test_elastic_remesh_devices():
     plan = ElasticPlan(tp_degree=1, old_data=1)
     mesh = plan.remesh(jax.devices())
     assert mesh.axis_names == ("data", "model")
+
+
+# --------------------------------------------------------------------- #
+# injectable clocks: liveness decisions never read the wall clock
+# --------------------------------------------------------------------- #
+
+class _Clock:
+    def __init__(self, t=0.0):
+        self.t = t
+        self.sleeps = []
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, s):
+        self.sleeps.append(s)
+        self.t += s
+
+    def advance(self, s):
+        self.t += s
+
+
+def test_heartbeat_fully_injectable_clock():
+    clk = _Clock(t=500.0)
+    hb = HeartbeatMonitor(["h0", "h1"], timeout_s=10.0, clock=clk)
+    assert hb.check() == {"h0": "ok", "h1": "ok"}
+    clk.advance(12.0)
+    hb.beat("h0")                       # beat() reads the injected clock
+    assert hb.check() == {"h0": "ok", "h1": "suspect"}
+    clk.advance(12.0)
+    assert hb.check()["h1"] == "dead"
+    assert hb.dead_hosts() == ["h1"]
+
+
+def test_heartbeat_dead_at_first_check_after_two_windows():
+    """Verdicts depend only on elapsed silence, not on check() cadence:
+    a single sparse check after 2x timeout must say dead immediately.
+    (The old window-reset implementation needed one check per window, so
+    a silent host could stay 'suspect' forever under sparse checks.)"""
+    hb = HeartbeatMonitor(["h0"], timeout_s=10.0)
+    hb.beat("h0", now=100.0)
+    # no intermediate checks at all — first look is 35s later
+    assert hb.check(now=135.0)["h0"] == "dead"
+    # and a fresh monitor polled every 0.1s converges at the same time
+    hb2 = HeartbeatMonitor(["h0"], timeout_s=10.0)
+    hb2.beat("h0", now=100.0)
+    verdicts = [hb2.check(now=100.0 + 0.1 * i)["h0"] for i in range(260)]
+    assert verdicts[99] == "ok"          # 9.9s silent
+    assert verdicts[101] == "suspect"    # 10.1s
+    assert verdicts[201] == "dead"       # 20.1s — exactly two windows
+    assert hb2.dead_hosts() == ["h0"]
+
+
+def test_heartbeat_add_remove_host():
+    hb = HeartbeatMonitor(["h0"], timeout_s=10.0)
+    hb.beat("h0", now=0.0)
+    hb.add_host("h1", now=25.0)          # rejoiner: fresh silence window
+    v = hb.check(now=29.0)
+    assert v == {"h0": "dead", "h1": "ok"}
+    hb.remove_host("h0")
+    assert hb.check(now=29.0) == {"h1": "ok"}
+    assert hb.dead_hosts() == []
+
+
+def test_straggler_samples_age_out():
+    clk = _Clock()
+    sm = StragglerMonitor(threshold=3.0, max_age_s=60.0, clock=clk)
+    # h7 was badly slow a while ago, then recovered
+    for step in range(8):
+        for h in range(8):
+            sm.record(f"h{h}", 5.0 if h == 7 else 1.0)
+    assert sm.stragglers() == ["h7"]
+    clk.advance(120.0)                   # old samples fall out of the window
+    for step in range(4):
+        for h in range(8):
+            sm.record(f"h{h}", 1.0)
+    assert sm.stragglers() == []
+    assert not sm.should_checkpoint_and_rebalance()
+
+
+def test_straggler_min_abs_slack_ignores_micro_noise():
+    """MAD-based relative detection misfires on µs-scale timing noise
+    when every host is fast; the absolute slack floor keeps a host that
+    is 'statistically' slow but only microseconds behind off the list."""
+    sm = StragglerMonitor(threshold=3.0, min_abs_s=0.1)
+    for step in range(8):
+        for h in range(8):
+            sm.record(f"h{h}", 0.0010 + (0.0008 if h == 7 else 0.0))
+    assert sm.stragglers() == []
+    # a genuinely slow host still trips it
+    sm2 = StragglerMonitor(threshold=3.0, min_abs_s=0.1)
+    for step in range(8):
+        for h in range(8):
+            sm2.record(f"h{h}", 1.0 + (0.9 if h == 7 else 0.0))
+    assert sm2.stragglers() == ["h7"]
+
+
+def test_straggler_forget_clears_history():
+    sm = StragglerMonitor(threshold=3.0)
+    for step in range(8):
+        for h in range(8):
+            sm.record(f"h{h}", 2.0 if h == 7 else 1.0)
+    assert sm.stragglers() == ["h7"]
+    sm.forget("h7")                      # ejection/rejoin wipes the slate
+    assert sm.stragglers() == []
+
+
+# --------------------------------------------------------------------- #
+# the acceptance gate: kill a replica mid-churn, answers stay bit-exact
+# --------------------------------------------------------------------- #
+
+def test_kill_replica_mid_churn_bit_exact(tmp_path):
+    """DESIGN.md §10 gate.  3-replica set under interleaved
+    insert/delete/compact/query churn with a deterministic fault
+    schedule — replica killed mid-stream, a delta batch dropped and
+    another duplicated, heartbeat ejection on a fake clock, rejoin via
+    checkpoint restore + log replay.  EVERY answer (ids AND distances)
+    must be bit-identical to a single-replica synchronous oracle running
+    the same op stream, no accepted request may be lost or answered
+    twice, and the rejoiner must be within max_lag before readmission."""
+    from repro.core.vectormaton import VectorMaton, VectorMatonConfig
+    from repro.distributed.replication import FaultInjector, ReplicaSet
+    from repro.serve.router import ReplicatedRouter
+
+    rng = np.random.default_rng(11)
+    DIM, ALPHA = 12, "abcd"
+
+    def mkseq():
+        return "".join(rng.choice(list(ALPHA),
+                                  size=int(rng.integers(5, 12))))
+
+    n = 60
+    vecs = rng.standard_normal((n, DIM)).astype(np.float32)
+    seqs = [mkseq() for _ in range(n)]
+    cfg = VectorMatonConfig(T=10 ** 9, M=8, seed=7, auto_compact=False)
+
+    rs = ReplicaSet(vecs, seqs, cfg, n_replicas=3,
+                    ckpt_dir=str(tmp_path / "ckpt"))
+    clk = _Clock()
+    inj = FaultInjector()
+    inj.kill("r1", at_wave=6)
+    inj.rejoin("r1", at_wave=14)
+    inj.drop_batch(8)
+    inj.duplicate_batch(11)
+    router = ReplicatedRouter(rs, max_lag=4, heartbeat_timeout_s=5.0,
+                              clock=clk, sleep=clk.sleep, injector=inj,
+                              checkpoint_every=4)
+    oracle = VectorMaton(vecs.copy(), list(seqs), cfg)
+
+    pats = ["ab", "a AND NOT cd", "LIKE '%a%b%'", "NOT ab", "cd OR b"]
+    live = set(range(n))
+    for wave in range(20):
+        # interleaved writes, mirrored into the oracle
+        v = rng.standard_normal(DIM).astype(np.float32)
+        s = mkseq()
+        vid = router.submit_insert(v, s)
+        assert vid == oracle.insert(v, s)
+        live.add(vid)
+        if wave % 5 == 3:
+            victim = sorted(live)[int(rng.integers(0, len(live)))]
+            router.submit_delete(victim)
+            oracle.delete(victim)
+            live.discard(victim)
+        if wave == 10:
+            router.submit_compact()
+            oracle.compact()
+        q = rng.standard_normal((len(pats), DIM)).astype(np.float32)
+        got = router.serve_wave(q, pats, k=6)
+        want = oracle.query_batch(q, pats, 6)
+        for p, (gd, gi), (wd, wi) in zip(pats, got, want):
+            assert gi.tolist() == wi.tolist(), (wave, p)
+            assert np.array_equal(gd, wd), (wave, p)
+        clk.advance(2.0)                 # heartbeat time marches on
+
+    router.assert_no_loss()
+    st = router.router_stats()
+    assert st["accepted"] == st["answered"] == 20
+    assert st["rejoined"] == 1
+    assert st["failovers"] >= 1          # the kill was actually observed
+    assert st["reships"] >= 1            # the dropped batch was re-sent
+    r1 = rs.replicas["r1"]
+    assert r1.alive and r1.serving and r1.restores == 1
+    assert rs.lag(r1) <= router.max_lag  # readmission contract
+    # every survivor ends at the commit watermark
+    assert all(r.applied == rs.log.tail
+               for r in rs.replicas.values() if r.alive)
+    assert ("kill", 6, "r1") in inj.events
+    assert ("rejoin", 14, "r1") in inj.events

@@ -430,3 +430,75 @@ def test_stale_wave_plan_rejected_at_dispatch():
     eng.insert(rng.standard_normal(DIM).astype(np.float32), "abcd")
     with pytest.raises(ValueError, match="stale plan"):
         eng.dispatch_batch(wave)
+
+
+# --------------------------------------------------------------------- #
+# typed deadline errors: RequestTimeout, StagingStall
+# --------------------------------------------------------------------- #
+
+def test_request_timeout_typed_and_counted():
+    """A wave that never delivers must surface as a typed
+    ``RequestTimeout`` carrying the undelivered tickets — with the drop
+    recorded against the tenant — instead of hanging the submitter on
+    the old hard-coded 120 s wait."""
+    from repro.serve.batching import RequestTimeout
+    from repro.serve.pipeline import WaveJob
+
+    rng = np.random.default_rng(0)
+    b = ContinuousBatcher(_engine("numpy"), pipeline=False,
+                          request_timeout_s=0.05)
+    try:
+        t0 = b.submit(Request(
+            vector=rng.standard_normal(DIM).astype(np.float32),
+            pattern="ab", k=3, tenant="slow"))
+        t1 = b.submit(Request(
+            vector=rng.standard_normal(DIM).astype(np.float32),
+            pattern="cd", k=3, tenant="slow"))
+        items = b.next_wave()
+        assert [q.seq for q in items] == [t0, t1]
+        wedged = WaveJob(queries=np.zeros((2, DIM), np.float32),
+                         patterns=["ab", "cd"], k=3, ef_search=64)
+        with pytest.raises(RequestTimeout) as ei:
+            b._collect_jobs([(wedged, items)], {})
+        assert ei.value.tickets == [t0, t1]
+        assert isinstance(ei.value, RuntimeError)
+        assert b.tenant_stats()["slow"]["dropped"] == 2
+        assert b.tenant_stats()["slow"]["served"] == 0
+    finally:
+        b.close()
+
+
+def test_request_timeout_config_plumbs_through():
+    b = ContinuousBatcher(_engine("numpy"), request_timeout_s=7.5)
+    try:
+        assert b.request_timeout_s == 7.5
+        assert "dropped" in next(iter(
+            b.tenant_stats().values()), {"dropped": 0})
+    finally:
+        b.close()
+
+
+def test_staging_stall_typed_with_diagnostics():
+    """All slots leased past the deadline -> typed ``StagingStall`` (a
+    ``TimeoutError`` subclass, so legacy handlers still catch it)
+    carrying the ring depth and observed wait, and counted on the
+    ring."""
+    from repro.serve.step import StagingStall
+
+    ring = StagingRing(dim=4, slots=2)
+    a = ring.acquire(np.zeros((1, 4), np.float32))
+    b = ring.acquire(np.zeros((1, 4), np.float32))
+    with pytest.raises(StagingStall) as ei:
+        ring.acquire(np.zeros((1, 4), np.float32), timeout=0.05)
+    err = ei.value
+    assert isinstance(err, TimeoutError)
+    assert err.depth == 2
+    assert err.wait_ms >= 50.0
+    assert ring.stalls == 1
+    assert "2 upload slots" in str(err)
+    a.release()
+    # a freed slot unwedges the ring
+    c = ring.acquire(np.zeros((1, 4), np.float32), timeout=0.05)
+    c.release()
+    b.release()
+    assert ring.stalls == 1

@@ -1,0 +1,359 @@
+"""Replica groups + delta-log replication: log semantics, follower
+apply, routing policy, failover mechanics (DESIGN.md §10).
+
+The end-to-end kill-a-replica-mid-churn exactness gate lives in
+tests/test_fault_tolerance.py; this file unit-tests the pieces it
+composes: delta-log ordering/truncation, idempotent + gap-checked
+apply, bounded-staleness routing, capped-backoff retry, leader
+promotion, rejoin catch-up, and log seeding from a live engine.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.vectormaton import VectorMaton, VectorMatonConfig
+from repro.distributed.replication import (DeltaLog, DeltaRecord,
+                                           FaultInjector, NoHealthyReplica,
+                                           ReplicaDead, ReplicaDiverged,
+                                           ReplicaSet, ReplicationGap)
+from repro.serve.router import ReplicatedRouter
+
+DIM = 8
+ALPHA = "abcd"
+
+
+class FakeClock:
+    """Injectable time source: ``clock()`` for liveness decisions,
+    ``sleep`` records the backoff sequence and advances time."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+        self.sleeps = []
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, s):
+        self.sleeps.append(s)
+        self.t += s
+
+    def advance(self, s):
+        self.t += s
+
+
+def _corpus(rng, n):
+    seqs = ["".join(rng.choice(list(ALPHA), size=rng.integers(5, 12)))
+            for _ in range(n)]
+    vecs = rng.standard_normal((n, DIM)).astype(np.float32)
+    return vecs, seqs
+
+
+def _cfg(**kw):
+    # raw-only (T = inf) numpy config: every strategy exact, no compile
+    kw.setdefault("T", 10 ** 9)
+    kw.setdefault("auto_compact", False)
+    kw.setdefault("M", 8)
+    kw.setdefault("seed", 7)
+    return VectorMatonConfig(**kw)
+
+
+def _mk_set(tmp_path, n=40, n_replicas=2, rng=None, **cfg_kw):
+    rng = rng or np.random.default_rng(0)
+    vecs, seqs = _corpus(rng, n)
+    rs = ReplicaSet(vecs, seqs, _cfg(**cfg_kw), n_replicas=n_replicas,
+                    ckpt_dir=str(tmp_path / "ckpt"))
+    return rs, rng
+
+
+# --------------------------------------------------------------------- #
+# DeltaLog
+# --------------------------------------------------------------------- #
+
+def test_delta_log_ordering_batch_truncation():
+    log = DeltaLog()
+    for i in range(1, 6):
+        log.append(DeltaRecord(lsn=i, op="delete", vector_id=i))
+    assert log.tail == 5 and len(log) == 5
+    # out-of-order append rejected
+    with pytest.raises(ValueError):
+        log.append(DeltaRecord(lsn=9, op="delete", vector_id=9))
+    assert [r.lsn for r in log.batch(2)] == [3, 4, 5]
+    assert [r.lsn for r in log.batch(0, upto=2)] == [1, 2]
+    # truncation moves the floor; lsns keep their identity
+    assert log.truncate(3) == 3
+    assert log.floor == 3 and log.tail == 5 and len(log) == 2
+    assert [r.lsn for r in log.batch(3)] == [4, 5]
+    # a follower behind the floor cannot be caught up from the log
+    with pytest.raises(ReplicationGap):
+        log.batch(1)
+    # truncate is idempotent below the floor
+    assert log.truncate(2) == 0
+
+
+# --------------------------------------------------------------------- #
+# follower apply: idempotency, gaps, divergence
+# --------------------------------------------------------------------- #
+
+def test_apply_duplicate_batch_is_idempotent(tmp_path):
+    rs, rng = _mk_set(tmp_path)
+    r1 = rs.replicas["r1"]
+    for j in range(3):
+        rs.apply_write("insert",
+                       vector=rng.standard_normal(DIM).astype(np.float32),
+                       sequence="abab")
+    batch = rs.log.batch(0)
+    assert r1.apply(batch) == 3
+    before = r1.engine.maintenance_stats()["delta_version"]
+    # the duplicate delivery is skipped record-by-record below the ack
+    assert r1.apply(batch) == 3
+    assert r1.engine.maintenance_stats()["delta_version"] == before
+
+
+def test_apply_gap_raises(tmp_path):
+    rs, rng = _mk_set(tmp_path)
+    r1 = rs.replicas["r1"]
+    for j in range(3):
+        rs.apply_write("insert",
+                       vector=rng.standard_normal(DIM).astype(np.float32),
+                       sequence="abab")
+    # deliver lsn 2..3 with the follower's ack still at 0
+    with pytest.raises(ReplicationGap):
+        r1.apply(rs.log.batch(1))
+    assert r1.applied == 0              # nothing partially applied
+
+
+def test_apply_divergent_insert_id_raises(tmp_path):
+    rs, rng = _mk_set(tmp_path)
+    r1 = rs.replicas["r1"]
+    rec, vid = rs.apply_write(
+        "insert", vector=rng.standard_normal(DIM).astype(np.float32),
+        sequence="abab")
+    bad = DeltaRecord(lsn=1, op="insert", vector=rec.vector,
+                      sequence=rec.sequence, vector_id=vid + 17)
+    with pytest.raises(ReplicaDiverged):
+        r1.apply([bad])
+
+
+def test_dead_replica_rejects_traffic(tmp_path):
+    rs, rng = _mk_set(tmp_path)
+    r1 = rs.replicas["r1"]
+    r1.kill()
+    with pytest.raises(ReplicaDead):
+        r1.serve_wave(rng.standard_normal((1, DIM)).astype(np.float32),
+                      ["ab"], 3)
+    rs.apply_write("delete", vector_id=0)
+    with pytest.raises(ReplicaDead):
+        rs.ship(r1)
+
+
+# --------------------------------------------------------------------- #
+# write funnel + leader failover
+# --------------------------------------------------------------------- #
+
+def test_replicated_writes_reach_followers_exactly(tmp_path):
+    rs, rng = _mk_set(tmp_path, n_replicas=3)
+    clk = FakeClock()
+    router = ReplicatedRouter(rs, max_lag=4, clock=clk, sleep=clk.sleep)
+    oracle = VectorMaton(*(lambda v, s: (v, s))(
+        *_corpus(np.random.default_rng(0), 40)), _cfg())
+    for j in range(6):
+        v = rng.standard_normal(DIM).astype(np.float32)
+        s = "".join(rng.choice(list(ALPHA), size=8))
+        assert router.submit_insert(v, s) == oracle.insert(v, s)
+    router.submit_delete(2)
+    oracle.delete(2)
+    q = rng.standard_normal((2, DIM)).astype(np.float32)
+    pats = ["ab", "a AND NOT cd"]
+    want = oracle.query_batch(q, pats, 5)
+    # every replica (after a wave head ships the suffix) answers the same
+    for _ in range(3):
+        got = router.serve_wave(q, pats, 5)
+        for (gd, gi), (wd, wi) in zip(got, want):
+            assert gi.tolist() == wi.tolist()
+            assert np.array_equal(gd, wd)
+    router.assert_no_loss()
+    assert all(r.applied == rs.log.tail for r in rs.replicas.values())
+
+
+def test_leader_failover_promotes_highest_watermark(tmp_path):
+    rs, rng = _mk_set(tmp_path, n_replicas=3)
+    clk = FakeClock()
+    router = ReplicatedRouter(rs, clock=clk, sleep=clk.sleep)
+    v = rng.standard_normal(DIM).astype(np.float32)
+    router.submit_insert(v, "abab")
+    # r2 catches up fully; r1 stays behind
+    rs.ship(rs.replicas["r2"])
+    rs.replicas["r0"].kill()
+    vid = router.submit_insert(v, "baba")        # triggers promotion
+    assert rs.leader_name == "r2"
+    assert router.stats["leader_promotions"] == 1
+    assert vid == 41                              # id stream uninterrupted
+    assert rs.leader.applied == rs.log.tail
+
+
+def test_promoted_leader_replays_before_writing(tmp_path):
+    rs, rng = _mk_set(tmp_path, n_replicas=2)
+    for j in range(4):
+        rs.apply_write("insert",
+                       vector=rng.standard_normal(DIM).astype(np.float32),
+                       sequence="abab")
+    assert rs.replicas["r1"].applied == 0
+    rs.replicas["r0"].kill()
+    rs.promote("r1")
+    # promotion replayed the full suffix: next insert lands on the same
+    # id the old leader would have assigned
+    _, vid = rs.apply_write(
+        "insert", vector=rng.standard_normal(DIM).astype(np.float32),
+        sequence="abab")
+    assert vid == 44
+
+
+def test_no_healthy_replica(tmp_path):
+    rs, rng = _mk_set(tmp_path, n_replicas=2)
+    clk = FakeClock()
+    router = ReplicatedRouter(rs, clock=clk, sleep=clk.sleep)
+    for r in rs.replicas.values():
+        r.kill()
+    q = rng.standard_normal((1, DIM)).astype(np.float32)
+    with pytest.raises(NoHealthyReplica):
+        router.serve_wave(q, ["ab"], 3)
+    with pytest.raises(NoHealthyReplica):
+        router.submit_insert(q[0], "abab")
+
+
+# --------------------------------------------------------------------- #
+# routing policy: staleness bound, backoff, reships
+# --------------------------------------------------------------------- #
+
+def test_stalled_replica_excluded_once_lag_exceeds_bound(tmp_path):
+    rs, rng = _mk_set(tmp_path, n_replicas=2)
+    clk = FakeClock()
+    inj = FaultInjector()
+    inj.stall("r1", from_wave=1, until_wave=100)
+    router = ReplicatedRouter(rs, max_lag=2, heartbeat_timeout_s=1e9,
+                              clock=clk, sleep=clk.sleep, injector=inj)
+    q = rng.standard_normal((1, DIM)).astype(np.float32)
+    for j in range(6):
+        router.submit_insert(
+            rng.standard_normal(DIM).astype(np.float32), "abab")
+        router.serve_wave(q, ["ab"], 3)
+    # r1 never applied a write (stalled), lag 6 > max_lag 2: every wave
+    # after the first couple lands on the leader
+    assert rs.replicas["r1"].applied == 0
+    assert rs.lag(rs.replicas["r1"]) == 6
+    assert rs.replicas["r0"].waves_served >= 4
+    router.assert_no_loss()
+
+
+def test_retry_backoff_sequence_capped(tmp_path):
+    rs, rng = _mk_set(tmp_path, n_replicas=4)
+    clk = FakeClock()
+    router = ReplicatedRouter(rs, clock=clk, sleep=clk.sleep,
+                              backoff_base_s=0.05, backoff_cap_s=0.08)
+    q = rng.standard_normal((1, DIM)).astype(np.float32)
+    router.serve_wave(q, ["ab"], 3)              # rr -> r0
+    for name in ("r1", "r2", "r3"):
+        rs.replicas[name].kill()
+    # the next wave walks into all three corpses before landing on the
+    # leader: 0.05, then 0.10 capped to 0.08, then 0.08 again — the
+    # exact capped-exponential sequence, recorded by the injected sleep
+    router.serve_wave(q, ["ab"], 3)
+    assert clk.sleeps == [0.05, 0.08, 0.08]
+    assert router.stats["retries"] == 3
+    assert router.stats["ejected"] == 3
+    router.assert_no_loss()
+
+
+def test_dropped_batch_reships_and_stays_exact(tmp_path):
+    rs, rng = _mk_set(tmp_path, n_replicas=2)
+    clk = FakeClock()
+    inj = FaultInjector()
+    inj.drop_batch(1)
+    inj.duplicate_batch(3)
+    router = ReplicatedRouter(rs, clock=clk, sleep=clk.sleep,
+                              injector=inj)
+    oracle = VectorMaton(*(lambda v, s: (v, s))(
+        *_corpus(np.random.default_rng(0), 40)), _cfg())
+    q = rng.standard_normal((1, DIM)).astype(np.float32)
+    for j in range(4):
+        v = rng.standard_normal(DIM).astype(np.float32)
+        router.submit_insert(v, "abab")
+        oracle.insert(v, "abab")
+        got = router.serve_wave(q, ["ab"], 4)
+        want = oracle.query_batch(q, ["ab"], 4)
+        assert got[0][1].tolist() == want[0][1].tolist()
+    assert router.stats["reships"] >= 1
+    assert ("drop_batch", 1) in inj.events
+    assert ("duplicate_batch", 3) in inj.events
+    assert all(r.applied == rs.log.tail for r in rs.replicas.values())
+
+
+# --------------------------------------------------------------------- #
+# rejoin + checkpoint/truncation interplay
+# --------------------------------------------------------------------- #
+
+def test_rejoin_restores_checkpoint_and_replays(tmp_path):
+    rs, rng = _mk_set(tmp_path, n_replicas=2)
+    clk = FakeClock()
+    router = ReplicatedRouter(rs, max_lag=2, heartbeat_timeout_s=5.0,
+                              clock=clk, sleep=clk.sleep,
+                              checkpoint_every=2)
+    q = rng.standard_normal((1, DIM)).astype(np.float32)
+    rs.replicas["r1"].kill()
+    for j in range(6):
+        router.submit_insert(
+            rng.standard_normal(DIM).astype(np.float32), "abab")
+        router.serve_wave(q, ["ab"], 3)
+        clk.advance(3.0)                 # r1 silent -> heartbeat-dead
+    assert not rs.replicas["r1"].serving
+    assert router.stats["checkpoints"] >= 1
+    r1 = router.rejoin("r1")
+    assert r1.serving and r1.alive
+    assert rs.lag(r1) == 0               # replayed to the watermark
+    assert r1.restores == 1
+    # the rejoined replica answers identically to the leader
+    want = rs.leader.engine.query_batch(q, ["ab"], 3)
+    got = r1.engine.query_batch(q, ["ab"], 3)
+    assert got[0][1].tolist() == want[0][1].tolist()
+    assert np.array_equal(got[0][0], want[0][0])
+
+
+def test_log_truncation_bounded_by_checkpoint_and_acks(tmp_path):
+    rs, rng = _mk_set(tmp_path, n_replicas=2)
+    for j in range(5):
+        rs.apply_write("insert",
+                       vector=rng.standard_normal(DIM).astype(np.float32),
+                       sequence="abab")
+    # no checkpoint yet: nothing may be dropped
+    assert rs.truncate_log() == 0
+    rs.ship(rs.replicas["r1"])
+    rs.checkpoint()
+    assert rs.truncate_log() == 5
+    assert rs.log.floor == 5 and rs.log.tail == 5
+
+
+def test_from_engine_seeds_log_from_live_delta(tmp_path):
+    """Attaching replication to an already-churned engine: the unfolded
+    delta (insert order preserved) and tombstones seed the log, and a
+    bootstrapped follower answers identically."""
+    from repro.serve.engine import RetrievalEngine
+    rng = np.random.default_rng(3)
+    vecs, seqs = _corpus(rng, 40)
+    eng = RetrievalEngine(vecs, seqs, _cfg())
+    for j in range(4):
+        eng.insert(rng.standard_normal(DIM).astype(np.float32), "abab")
+    eng.delete(1)
+    rs = ReplicaSet.from_engine(eng, n_replicas=2,
+                                ckpt_dir=str(tmp_path / "ckpt"))
+    assert rs.log.tail == 5              # 4 inserts + 1 delete seeded
+    assert all(r.applied == 5 for r in rs.replicas.values())
+    q = rng.standard_normal((1, DIM)).astype(np.float32)
+    want = eng.query_batch(q, ["ab"], 5)
+    got = rs.replicas["r1"].engine.query_batch(q, ["ab"], 5)
+    assert got[0][1].tolist() == want[0][1].tolist()
+    # and replication keeps working post-attach
+    _, vid = rs.apply_write(
+        "insert", vector=rng.standard_normal(DIM).astype(np.float32),
+        sequence="baba")
+    rs.ship(rs.replicas["r1"])
+    assert rs.replicas["r1"].applied == 6
