@@ -1,9 +1,50 @@
-"""Fig. 12 analogue: skip-build threshold T — index size / build time /
-query trade-off with mixed pattern lengths |p| ∈ {2,3,4}."""
+"""Threshold sweep (Fig. 12 analogue) + adaptive-planner calibration
+sweep and gate (DESIGN.md §11) — PR 10.
+
+Two parts:
+
+  * **calibration sweep** (default; what ``scripts/ci.sh`` gates) —
+    conjunction predicates spanning ~3 decades of selectivity run
+    through two identical indexes that differ ONLY in
+    ``plan_mode`` ("static" vs "adaptive"):
+
+      - cold adaptive answers must be bit-identical to static (the
+        demote-only exactness contract, before any feedback exists);
+      - per sweep point, adaptive QPS must not regress below
+        ``QPS_RATIO_MIN`` × static (within-run, interleaved samples);
+      - the selectivity estimator's point estimate must land within
+        ``EST_RATIO_MAX`` × of the true conjunction cardinality
+        (sampling-tightened — the corpus sits above the estimator's
+        sample cutoff);
+      - adaptive plan time (estimation + cost scoring + wave-head
+        absorb) stays within ``PLAN_MS_RATIO_MAX`` × static plan time
+        plus a fixed slack;
+      - a dense-prefilter / sparse-verify workload (every record
+        contains 'a', almost none START with 'a') must trip the
+        residual yield-collapse escalation: ``planner_residual_
+        switches >= 1`` proves runtime feedback changed a strategy.
+
+    Writes the repo-root ``BENCH_PR10.json`` trajectory.  With
+    ``--baseline BENCH_PR10.json`` the static strategy mix per sweep
+    point is also pinned against the committed file (machine-
+    independent determinism; QPS is never compared across machines).
+
+  * **threshold sweep** (``--threshold``, full runs only) — the
+    original skip-build threshold T study: index size / build time /
+    query trade-off with mixed pattern lengths |p| ∈ {2,3,4}.
+
+    PYTHONPATH=src python -m benchmarks.bench_threshold --smoke \
+        --baseline BENCH_PR10.json
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 import time
+from typing import Dict, List
 
 import numpy as np
 
@@ -13,8 +54,270 @@ from repro.data.corpora import make_corpus, sample_patterns
 
 from .common import emit, save_json
 
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+TRAJECTORY = os.path.join(REPO_ROOT, "BENCH_PR10.json")
 
-def main():
+# adaptive may not lose >10% QPS to static at any sweep point (the
+# planner's whole job); slack covers scheduler jitter on shared CI —
+# within-run comparison, never cross-machine
+QPS_RATIO_MIN = 0.90
+# estimator point vs true conjunction cardinality (DESIGN.md §11);
+# checked only where the truth is large enough for a ratio to mean
+# anything — below EST_MIN_TRUE a ±few-row sampling wiggle explodes it
+EST_RATIO_MAX = 2.0
+EST_MIN_TRUE = 8
+# adaptive planning (estimate + score + absorb) vs static planning,
+# summed over the sweep; the absolute slack keeps a sub-ms denominator
+# from turning noise into a gate failure
+PLAN_MS_RATIO_MAX = 2.5
+PLAN_MS_ABS_SLACK = 2.0
+
+
+# --------------------------------------------------------------------- #
+# calibration sweep (BENCH_PR10 gate)
+# --------------------------------------------------------------------- #
+
+def _pick_conjunctions(seqs: List[str], n_points: int,
+                       seed: int = 0) -> List[Dict]:
+    """Deterministic conjunction sweep points spanning selectivity
+    decades: rank substrings by document frequency, precompute match
+    masks, and for each target fraction pick the AND pair whose true
+    cardinality lands closest (in log space)."""
+    from collections import Counter
+    grams: Counter = Counter()
+    for s in seqs:
+        for L in (1, 2):
+            for i in range(len(s) - L + 1):
+                grams[s[i:i + L]] += 1
+    cands = [g for g, _ in grams.most_common(40)]
+    masks = {g: np.fromiter((g in s for s in seqs), bool, len(seqs))
+             for g in cands}
+    n = len(seqs)
+    targets = np.logspace(np.log10(0.4), np.log10(0.004), n_points)
+    points, used = [], set()
+    for frac in targets:
+        best, best_err = None, None
+        for i, a in enumerate(cands):
+            for b in cands[i + 1:]:
+                if (a, b) in used:
+                    continue
+                true = int((masks[a] & masks[b]).sum())
+                if true == 0:
+                    continue
+                err = abs(np.log(true / n) - np.log(frac))
+                if best_err is None or err < best_err:
+                    best, best_err = (a, b, true), err
+        a, b, true = best
+        used.add((a, b))
+        points.append({"pattern": f"{a} AND {b}", "true": true,
+                       "target_frac": float(frac)})
+    return points
+
+
+def _paired_qps(vm_s, vm_a, queries: np.ndarray, pattern: str,
+                k: int) -> tuple:
+    """(static_qps, adaptive_qps) from per-batch interleaved sampling,
+    min-of-batches per mode.  A fast sweep point finishes one batch in
+    well under a millisecond, where a single scheduler hiccup reads as
+    a 30% "regression"; alternating the two modes batch-by-batch and
+    taking each mode's fastest batch compares noise floors instead."""
+    pats = [pattern] * len(queries)
+    t0 = time.perf_counter()
+    vm_s.query_batch(queries, pats, k)
+    vm_a.query_batch(queries, pats, k)
+    dt = time.perf_counter() - t0
+    reps = min(150, max(5, int(0.12 / max(dt, 1e-4))))
+    best_s = best_a = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        vm_s.query_batch(queries, pats, k)
+        best_s = min(best_s, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        vm_a.query_batch(queries, pats, k)
+        best_a = min(best_a, time.perf_counter() - t0)
+    return len(queries) / best_s, len(queries) / best_a
+
+
+def _cold_plan_ms(vm, pattern: str, reps: int = 3) -> float:
+    """min cold-plan wall time: compile (estimation + strategy scoring
+    happen here) + coalesce + wave-head absorb."""
+    best = float("inf")
+    for _ in range(reps):
+        vm.runtime._pred_cache.clear()
+        t0 = time.perf_counter()
+        vm.plan([pattern])
+        best = min(best, (time.perf_counter() - t0) * 1e3)
+    return best
+
+
+def _yield_collapse_probe(seed: int = 9) -> Dict:
+    """Dense CONTAINS-'a' prefilter, sparse LIKE 'a%' verification:
+    the residual doubling loop's yield collapses and the planner must
+    escalate to the full scan and replay it (runtime feedback changing
+    a strategy — the acceptance criterion's demonstrable point)."""
+    rng = np.random.default_rng(seed)
+    n = 400
+    seqs = ["b" + "".join(rng.choice(list("abc"), size=10))
+            for _ in range(n - 3)] + ["abc" * 4] * 3
+    vecs = rng.standard_normal((n, 12)).astype(np.float32)
+    res = {}
+    for mode in ("static", "adaptive"):
+        vm = VectorMaton(vecs, seqs,
+                         VectorMatonConfig(T=10 ** 9, plan_mode=mode))
+        q = np.zeros(12, np.float32)
+        res[mode] = vm.query(q, "LIKE 'a%'", 8)
+        if mode == "adaptive":
+            stats = vm.maintenance_stats()
+            replay = vm.query(q, "LIKE 'a%'", 8)
+    parity = (np.array_equal(res["static"][1], res["adaptive"][1])
+              and np.array_equal(res["adaptive"][1], replay[1]))
+    return {"residual_switches": int(stats["planner_residual_switches"]),
+            "parity": bool(parity)}
+
+
+def run_calibration(scale: float = 2.0, T: int = 30, n_queries: int = 32,
+                    n_points: int = 6, k: int = 10,
+                    seed: int = 0) -> Dict:
+    vecs, seqs = make_corpus("words", scale=scale, seed=seed)
+    dim = vecs.shape[1]
+    rng = np.random.default_rng(seed)
+    points = _pick_conjunctions(seqs, n_points, seed=seed)
+    queries = rng.standard_normal((n_queries, dim)).astype(np.float32)
+
+    cfg = dict(T=T, M=8, ef_con=40)
+    t0 = time.perf_counter()
+    vm_s = VectorMaton(vecs, seqs,
+                       VectorMatonConfig(plan_mode="static", **cfg))
+    vm_a = VectorMaton(vecs, seqs,
+                       VectorMatonConfig(plan_mode="adaptive", **cfg))
+    build_s = time.perf_counter() - t0
+
+    # cold parity first: before ANY feedback exists the adaptive planner
+    # must reproduce the static plan bit-for-bit (demote-only legality).
+    # This pass doubles as the jit warm-up for both indexes, so neither
+    # mode pays one-time compiles inside its timed window below.
+    pats = [p["pattern"] for p in points]
+    cold_parity = True
+    for pat in pats:
+        rs = vm_s.query_batch(queries, [pat] * len(queries), k)
+        ra = vm_a.query_batch(queries, [pat] * len(queries), k)
+        for (ds, is_), (da, ia) in zip(rs, ra):
+            if not (np.array_equal(is_, ia)
+                    and np.allclose(ds, da, rtol=1e-6)):
+                cold_parity = False
+
+    # static strategy mix per point — machine-independent, pinned
+    # against the committed baseline
+    strategies = {p["pattern"]:
+                  dict(sorted(vm_s.plan([p["pattern"]]).strategies.items()))
+                  for p in points}
+
+    # timed passes: batch-interleaved, min-of-batches per mode (the warm
+    # pass above already paid the jit compiles).  The adaptive index
+    # keeps absorbing executor feedback at wave heads throughout — that
+    # is the configuration being sold.
+    for p in points:
+        qs_s, qs_a = _paired_qps(vm_s, vm_a, queries, p["pattern"], k)
+        p["static_qps"] = qs_s
+        p["adaptive_qps"] = qs_a
+        p["qps_ratio"] = qs_a / qs_s
+
+    # estimator accuracy per point (sampling-tightened: the corpus is
+    # above SelectivityEstimator.SAMPLE_CUTOFF by construction)
+    from repro.core.predicate import _Ctx, normalize, parse_predicate
+    ctx = _Ctx(vm_a.esam, vm_a.runtime)
+    for p in points:
+        iv = vm_a.planner.estimator.estimate(
+            normalize(parse_predicate(p["pattern"])), ctx)
+        pt = max(1, iv.point)
+        p.update(est_lo=iv.lo, est_hi=iv.hi, est_point=iv.point,
+                 est_ratio=float(max(pt / p["true"], p["true"] / pt)))
+
+    # plan-time overhead, summed over the sweep
+    static_plan_ms = sum(_cold_plan_ms(vm_s, p["pattern"]) for p in points)
+    adaptive_plan_ms = sum(_cold_plan_ms(vm_a, p["pattern"])
+                           for p in points)
+
+    out = {
+        "config": {"corpus": "words", "scale": scale, "n": len(seqs),
+                   "dim": dim, "T": T, "n_queries": n_queries, "k": k,
+                   "n_points": n_points, "seed": seed},
+        "build_s": build_s,
+        "cold_parity": cold_parity,
+        "points": points,
+        "strategies": strategies,
+        "static_plan_ms": static_plan_ms,
+        "adaptive_plan_ms": adaptive_plan_ms,
+        "yield_collapse": _yield_collapse_probe(),
+        "planner": {key: val
+                    for key, val in vm_a.maintenance_stats().items()
+                    if key.startswith("planner_")
+                    and isinstance(val, (int, float))},
+    }
+    for p in points:
+        emit(f"planner/sel{p['true']}", 1e6 / max(p["adaptive_qps"], 1e-9),
+             f"qps_ratio={p['qps_ratio']:.3f};est_ratio="
+             f"{p['est_ratio']:.2f};true={p['true']}")
+    emit("planner/plan_overhead", adaptive_plan_ms * 1e3,
+         f"static_ms={static_plan_ms:.2f};"
+         f"adaptive_ms={adaptive_plan_ms:.2f}")
+    save_json("planner_calibration", out)
+    return out
+
+
+def check(out: Dict, baseline: str | None) -> List[str]:
+    errs = []
+    # (a) demote-only exactness: cold adaptive ≡ static
+    if not out["cold_parity"]:
+        errs.append("cold adaptive answers differ from static")
+    for p in out["points"]:
+        # (b) adaptive must not lose QPS at any sweep point
+        if p["qps_ratio"] < QPS_RATIO_MIN:
+            errs.append(f"adaptive QPS regressed at {p['pattern']!r}: "
+                        f"ratio={p['qps_ratio']:.3f} < {QPS_RATIO_MIN}")
+        # (c) estimator point within 2x of the true cardinality
+        if p["true"] >= EST_MIN_TRUE and p["est_ratio"] > EST_RATIO_MAX:
+            errs.append(f"estimator off at {p['pattern']!r}: "
+                        f"point={p['est_point']} true={p['true']} "
+                        f"ratio={p['est_ratio']:.2f} > {EST_RATIO_MAX}")
+        # interval soundness is a hard invariant, not a tolerance
+        if not (p["est_lo"] <= p["true"] <= p["est_hi"]):
+            errs.append(f"estimator interval excludes truth at "
+                        f"{p['pattern']!r}: [{p['est_lo']},{p['est_hi']}]"
+                        f" vs {p['true']}")
+    # (d) planning overhead bounded
+    if out["adaptive_plan_ms"] > (PLAN_MS_RATIO_MAX * out["static_plan_ms"]
+                                  + PLAN_MS_ABS_SLACK):
+        errs.append(f"adaptive plan time {out['adaptive_plan_ms']:.2f}ms"
+                    f" > {PLAN_MS_RATIO_MAX}x static "
+                    f"{out['static_plan_ms']:.2f}ms + {PLAN_MS_ABS_SLACK}")
+    # (e) runtime feedback demonstrably changed a strategy
+    yc = out["yield_collapse"]
+    if yc["residual_switches"] < 1:
+        errs.append("yield-collapse probe produced no residual switch")
+    if not yc["parity"]:
+        errs.append("yield-collapse probe answers diverged from static")
+    if baseline and os.path.exists(baseline):
+        with open(baseline) as f:
+            base = json.load(f)
+        if base.get("config") == out["config"]:
+            # strategy choice is deterministic given (corpus, config) —
+            # pin the static mix; QPS is never compared across machines
+            if base.get("strategies") != out["strategies"]:
+                errs.append(f"static strategy mix drifted: "
+                            f"{base.get('strategies')} -> "
+                            f"{out['strategies']}")
+        else:
+            print("# baseline config differs; trajectory gate skipped",
+                  file=sys.stderr)
+    return errs
+
+
+# --------------------------------------------------------------------- #
+# original Fig. 12 threshold sweep (full runs)
+# --------------------------------------------------------------------- #
+
+def run_threshold() -> List[Dict]:
     vecs, seqs = make_corpus("words", scale=0.35)
     dim = vecs.shape[1]
     rng = np.random.default_rng(0)
@@ -40,7 +343,45 @@ def main():
              f"recall={rows[-1]['recall']:.3f};"
              f"size={rows[-1]['size_entries']};build_s={build_s:.1f}")
     save_json("threshold", rows)
+    return rows
+
+
+def main(smoke: bool = False, baseline: str | None = None,
+         threshold: bool = False) -> Dict:
+    if smoke:
+        out = run_calibration(scale=1.3, T=30, n_queries=16, n_points=5)
+    else:
+        out = run_calibration()
+        if threshold:
+            run_threshold()
+    errs = check(out, baseline)
+    if errs:
+        # keep the committed baseline intact so the gate keeps firing
+        for e in errs:
+            print(f"# PLANNER GATE FAILED: {e}", file=sys.stderr)
+        sys.exit(1)
+    with open(TRAJECTORY, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    worst = min(p["qps_ratio"] for p in out["points"])
+    print(f"bench_threshold OK: {len(out['points'])} sweep points, "
+          f"worst adaptive/static qps ratio {worst:.2f}, "
+          f"est_ratio<=2x, residual_switches="
+          f"{out['yield_collapse']['residual_switches']}, "
+          f"plan {out['adaptive_plan_ms']:.2f}ms vs "
+          f"{out['static_plan_ms']:.2f}ms")
+    return out
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--baseline", default=None,
+                    help="previous BENCH_PR10.json to pin the static "
+                         "strategy mix against")
+    ap.add_argument("--threshold", action="store_true",
+                    help="also run the Fig. 12 skip-build threshold "
+                         "sweep (full runs only)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, baseline=args.baseline,
+         threshold=args.threshold)

@@ -325,8 +325,15 @@ class PackedRuntime:
         self._id_graph_states: Optional[Dict[int, List[int]]] = None
         self._dev: Optional[dict] = None    # device cache, built once
         self._dev_n = 0                     # vector count at upload time
-        # predicate key -> (delta version at compile, compiled predicate)
-        self._pred_cache: Dict[str, Tuple[int, CompiledPredicate]] = {}
+        # predicate key -> (delta version at compile, compiled predicate,
+        # planner-measured winning strategy at compile — a later measured
+        # winner invalidates the entry so the re-compile replays it)
+        self._pred_cache: Dict[
+            str, Tuple[int, CompiledPredicate, Optional[str]]] = {}
+        # owning index's AdaptivePlanner (set by build; None for bare
+        # runtimes).  Executors report (strategy, units, ms) through it;
+        # the fold happens at wave heads only (DESIGN.md §11).
+        self.planner = None
         # device-resident execution (DESIGN.md §3).  The three toggles are
         # parity escape hatches: each False routes that stage through the
         # legacy host-mediated path, which tests/test_device_exec.py uses
@@ -460,6 +467,8 @@ class PackedRuntime:
         # live view for the same reason as sequences: attribute leaves
         # evaluate post-freeze inserts host-side at compile time
         rt.attributes = getattr(vm, "attributes", rt.attributes)
+        # the index-owned planner: feedback outlives this generation
+        rt.planner = getattr(vm, "planner", None)
         return rt
 
     # ------------------------------------------------------------------ #
@@ -999,8 +1008,25 @@ class PackedRuntime:
         return y.at[jnp.asarray(np.nonzero(tail)[0], jnp.int32)].set(
             jnp.asarray(self.vectors[cand_np[tail]]))
 
+    @staticmethod
+    def _scan_units(scan_items) -> int:
+        """Cost-model work units for a scan batch: candidate rows ranked,
+        summed as |cand| × |requests| per item (DESIGN.md §11)."""
+        units = 0
+        for e, segs, tail in scan_items:
+            cand = sum(hi - lo for lo, hi in segs) + len(tail)
+            units += cand * len(e.requests)
+        return units
+
+    def _observe(self, strategy: str, units: int, dt_s: float) -> None:
+        """Report one executed work item to the owning index's planner
+        (no-op for bare runtimes / static mode); folded at wave heads."""
+        if self.planner is not None:
+            self.planner.observe(strategy, units, dt_s * 1e3)
+
     def _execute_scan_host(self, queries, scan_items, k, parts) -> None:
         from ..kernels import ops
+        t0 = time.perf_counter()
         for e, segs, tail in scan_items:
             chunks = [self.base_ids[lo:hi] for lo, hi in segs]
             if len(tail):
@@ -1014,6 +1040,8 @@ class PackedRuntime:
             for row, r in enumerate(e.requests):
                 valid = li[row] >= 0
                 parts[r].append((d[row][valid], cand[li[row][valid]]))
+        self._observe("scan", self._scan_units(scan_items),
+                      time.perf_counter() - t0)
 
     def _assemble_scan_batch(self, queries, scan_items):
         """Flatten the batch's scan items into one descriptor launch:
@@ -1112,7 +1140,9 @@ class PackedRuntime:
             queries[q_rows], q_owner, dstarts, dlens, downers,
             tres_i, tres_ow, tship_i, rows, tship_ow, k,
             metric=self.metric, accum=self.accum)
-        self.wave_times["launch_ms"] += (time.perf_counter() - t0) * 1e3
+        dt = time.perf_counter() - t0
+        self.wave_times["launch_ms"] += dt * 1e3
+        self._observe("scan", self._scan_units(scan_items), dt)
         li = len(launches)
         launches.append((v, g))
         for row, r in enumerate(q_rows):
@@ -1185,7 +1215,9 @@ class PackedRuntime:
                 metric=self.metric, accum=self.accum)
             self.sq8_stats["escalations"] += 1
             self._sq8_bad_streak += 1
-        self.wave_times["launch_ms"] += (time.perf_counter() - t0) * 1e3
+        dt = time.perf_counter() - t0
+        self.wave_times["launch_ms"] += dt * 1e3
+        self._observe("scan", self._scan_units(scan_items), dt)
         li = len(launches)
         launches.append((v, g))
         for row, r in enumerate(q_rows):
@@ -1200,11 +1232,18 @@ class PackedRuntime:
             for r in reqs:
                 d, i = g.search(queries[r], k, ef_search)
                 parts[r].append((d, i))
+        t0 = time.perf_counter()
+        n_pairs = 0
         for u, allowed, reqs in graph_filtered:
             g = self.graph_objs[u]
+            n_pairs += len(reqs)
             for r in reqs:
                 d, i = g.search(queries[r], k, ef_search, allowed=allowed)
                 parts[r].append((d, i))
+        if n_pairs:
+            self._observe("filtered_graph",
+                          n_pairs * max(ef_search, k),
+                          time.perf_counter() - t0)
 
     def _graph_fetch_width(self, k: int, ef_search: int
                            ) -> Tuple[int, int, bool]:
@@ -1279,11 +1318,14 @@ class PackedRuntime:
                 emit(d, i, reqs)
             for u, allowed, reqs in graph_filtered:
                 h = dev["graphs"][u]
+                t0 = time.perf_counter()
                 d, i = hnsw_search_batch(
                     dev["vectors"], h["ids"], h["level0"], h["entry"],
                     jnp.asarray(queries[reqs]), k=k, ef=ef_cap,
                     metric=self.metric,
                     allowed=jnp.asarray(compose_mask(allowed)))
+                self._observe("filtered_graph", len(reqs) * ef_cap,
+                              time.perf_counter() - t0)
                 ops.record_launch(
                     "graph_state_filt", (u, len(reqs), k, ef_cap))
                 emit(d, i, reqs)
@@ -1351,10 +1393,13 @@ class PackedRuntime:
             mm = np.zeros((mn_pad, dn), dtype=bool)
             for j, m in enumerate(fr["masks"]):
                 mm[j] = m
+            t0 = time.perf_counter()
             d, i = hnsw_search_fused_filtered(
                 dev["vectors"], b["ids"], b["level0"], b["entry"],
                 jnp.asarray(mm), jnp.asarray(mi_arr), jnp.asarray(gi),
                 jnp.asarray(qm), k=k, ef=ef_cap, metric=self.metric)
+            self._observe("filtered_graph", p * ef_cap,
+                          time.perf_counter() - t0)
             ops.record_launch("graph_fused_filt",
                               (bkey, p_pad, mn_pad, k, ef_cap, self.metric))
             self.traffic["mask_bytes"] += mn_pad * dn
@@ -1416,7 +1461,19 @@ class PackedRuntime:
         exhausted).  The old loop recomputed the full dense distance
         matrix every round, paying O(rounds · Q · |cand| · d) for
         distances it already had; only the (Q, m) winners ever cross to
-        the host."""
+        the host.
+
+        Adaptive escalation (DESIGN.md §11): the loop tracks observed
+        verification yield; when a row's projected need ``k/yield``
+        already covers the whole prefilter — the doubling ramp would
+        provably walk every candidate anyway — it jumps straight to the
+        full scan instead of re-ranking through the remaining doublings,
+        reports the switch to the planner (``planner_residual_switches``)
+        and remembers it per (predicate, delta version) so a re-compile
+        starts there (``CompiledSource.residual_full``).  Result-
+        identical: the top-m ranking of the cached matrix is prefix-
+        stable in m, and assembly still stops at k verified hits."""
+        t_start = time.perf_counter()
         cand = self._live(s.ids)
         if len(cand) == 0:
             return
@@ -1431,16 +1488,21 @@ class PackedRuntime:
             return v
 
         reqs = e.requests
+        adaptive = (self.planner is not None
+                    and getattr(self.planner, "adaptive", False))
         dmat = self._dense_dist(queries[reqs], cand)
-        m = min(len(cand), max(4 * k, k))
+        m = (len(cand) if (s.residual_full and adaptive)
+             else min(len(cand), max(4 * k, k)))
         while True:
             d, li = self._rank_topm(dmat, m)
             done = True
+            checked = cnt = 0
             for row in range(len(reqs)):
-                cnt = 0
+                cnt = checked = 0
                 for c in li[row]:
                     if c < 0:
                         break
+                    checked += 1
                     if ok(int(cand[c])):
                         cnt += 1
                         if cnt >= k:
@@ -1450,7 +1512,23 @@ class PackedRuntime:
                     break
             if done or m >= len(cand):
                 break
-            m = min(2 * m, len(cand))
+            grown = min(2 * m, len(cand))
+            if adaptive and checked:
+                # yield-collapse switch: the failing row verified cnt of
+                # checked ranked candidates, so it needs ~k·checked/cnt
+                # ranked rows; once that projection covers the whole
+                # prefilter AND the next doubling wouldn't, escalate to
+                # the full scan in one step
+                need = (k * checked) // max(cnt, 1)
+                if need >= len(cand) and grown < len(cand):
+                    m = len(cand)
+                    s.residual_full = True
+                    self.planner.note_residual_switch(
+                        e.key, int(self.delta.version))
+                    continue
+            m = grown
+        self._observe("residual", m * len(reqs),
+                      time.perf_counter() - t_start)
         for row, r in enumerate(reqs):
             vd: List[float] = []
             vi: List[int] = []

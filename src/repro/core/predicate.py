@@ -680,6 +680,11 @@ class CompiledSource:
                                                  # the sharded planner turns
                                                  # it into per-shard
                                                  # descriptor columns
+    residual_full: bool = False                  # residual sources: start the
+                                                 # over-fetch loop at the full
+                                                 # prefilter (a measured yield
+                                                 # collapse replayed by the
+                                                 # adaptive planner, §11)
 
 
 @dataclass
@@ -705,11 +710,15 @@ class _Ctx:
     frozen chain cover ∪ chain-delta; states created after the freeze
     have no frozen cover and resolve to their live ESAM V set."""
 
-    def __init__(self, esam, runtime) -> None:
+    def __init__(self, esam, runtime, planner=None) -> None:
         self.esam = esam
         self.rt = runtime
         self.n = len(runtime.vectors)            # live count: base + delta
         self.n_frozen = runtime.n_states
+        self.planner = planner                   # AdaptivePlanner | None —
+                                                 # None/static keeps every
+                                                 # legacy decision (parity
+                                                 # oracle, DESIGN.md §11)
         self._mask_cache: Dict[int, np.ndarray] = {}
         self._delta_cache: Dict[int, np.ndarray] = {}
         self._attr_mask_cache: Dict[str, np.ndarray] = {}
@@ -940,6 +949,12 @@ def _and_source(node: And, ctx: _Ctx) -> Optional[CompiledSource]:
     # are brute-forced regardless of the strategy chosen below
     delta_kept = np.sort(anchor_delta[allowed[anchor_delta]])
     sel = int(keep_base.sum()) + len(delta_kept)
+    planner = ctx.planner
+    if planner is not None and planner.adaptive:
+        # estimates-vs-observed bookkeeping: the interval the estimator
+        # would have scored with, checked against the exact count the
+        # compile materialized anyway (planner_est_* counters)
+        planner.record_estimate(planner.estimator.estimate(node, ctx), sel)
     if sel == 0 and exact:
         return None
     if not exact:
@@ -948,9 +963,23 @@ def _and_source(node: And, ctx: _Ctx) -> Optional[CompiledSource]:
             return None
         return CompiledSource(strategy="residual", anchor=anchor_state,
                               ids=ids, verify=node, est=sel)
-    if frozen and cov.graph_states and sel >= max(
-            FILTERED_GRAPH_MIN_KEEP,
-            int(FILTERED_GRAPH_MIN_FRAC * ctx.cover_size(anchor_state))):
+    # legacy compile-time rule — the static parity oracle, and the upper
+    # bound of the adaptive planner's legal set (beam recall is part of
+    # the static contract: adaptive may demote filtered_graph -> scan on
+    # measured cost, never promote a scan into a beam search)
+    static_strategy = ("filtered_graph"
+                       if frozen and cov.graph_states and sel >= max(
+                           FILTERED_GRAPH_MIN_KEEP,
+                           int(FILTERED_GRAPH_MIN_FRAC
+                               * ctx.cover_size(anchor_state)))
+                       else "scan")
+    strategy = static_strategy
+    if planner is not None:
+        strategy = planner.choose_conjunction(
+            key=node.key(), version=int(ctx.rt.delta.version), sel=sel,
+            n_graphs=len(cov.graph_states) if cov is not None else 0,
+            static_strategy=static_strategy)
+    if strategy == "filtered_graph":
         return CompiledSource(strategy="filtered_graph", anchor=anchor_state,
                               segments=cov.segments,
                               seg_states=cov.states,
@@ -1027,16 +1056,22 @@ def _compile_disjunct(node: Predicate, ctx: _Ctx
     raise TypeError(f"unknown predicate node {node!r}")
 
 
-def compile_predicate(pred: Predicate, esam, runtime) -> CompiledPredicate:
+def compile_predicate(pred: Predicate, esam, runtime,
+                      planner=None) -> CompiledPredicate:
     """Lower ``pred`` to executable sources against a PackedRuntime.
 
     Top-level OR splits into one source per disjunct; the executor merges
     their results with id-dedup (a membership-bitmap union collapses pure
     scan disjuncts into one deduplicated scan first).  Residual sources
-    require the runtime to carry the original sequences."""
+    require the runtime to carry the original sequences.
+
+    ``planner`` (core.planner.AdaptivePlanner) arbitrates strategy for
+    conjunction sources and replays measured residual escalations; None
+    or ``plan_mode="static"`` reproduces every legacy decision exactly
+    (DESIGN.md §11)."""
     pred = as_predicate(pred)
     norm = normalize(pred)
-    ctx = _Ctx(esam, runtime)
+    ctx = _Ctx(esam, runtime, planner=planner)
     disjuncts = norm.children if isinstance(norm, Or) else [norm]
     sources = []
     for d in disjuncts:
@@ -1044,6 +1079,15 @@ def compile_predicate(pred: Predicate, esam, runtime) -> CompiledPredicate:
         if s is not None:
             sources.append(s)
     sources = _fuse_scan_disjuncts(sources, ctx)
+    if planner is not None and any(s.strategy == "residual"
+                                   for s in sources):
+        # a measured yield collapse at this (predicate, delta version)
+        # starts re-compiled residual loops at the full prefilter scan —
+        # same verified ranking, without replaying the doubling ramp
+        if planner.residual_full(norm.key(), int(runtime.delta.version)):
+            for s in sources:
+                if s.strategy == "residual":
+                    s.residual_full = True
     if any(s.verify is not None for s in sources):
         seqs = getattr(runtime, "sequences", None)
         if not seqs or len(seqs) != ctx.n:

@@ -51,6 +51,7 @@ import numpy as np
 from .esam import ESAM, ROOT
 from .hnsw import HNSW
 from .packed import PackedRuntime, QueryPlan, VectorStore
+from .planner import AdaptivePlanner
 from .predicate import CompiledPredicate, Predicate, as_predicate, \
     compile_predicate
 
@@ -86,6 +87,12 @@ class VectorMatonConfig:
     # ("genre = 'rock' AND price < 10"); undeclared fields raise at
     # predicate compile time.  None = no structured attributes.
     schema: Optional[Dict[str, str]] = None
+    # strategy arbitration (DESIGN.md §11): 'adaptive' scores every legal
+    # strategy per conjunction source with the cost model and folds
+    # executor feedback at wave heads; 'static' keeps every legacy
+    # compile-time decision — the bit-exactness parity oracle.  Adaptive
+    # never changes WHAT a plan returns, only WHICH exact strategy runs.
+    plan_mode: str = "adaptive"
 
 
 @dataclass
@@ -139,6 +146,10 @@ class VectorMaton:
         self.runtime_builds = 0                  # full re-flatten count
         self.n_compactions = 0
         self._gen_seq = 0                        # next generation number
+        # owned by the index, NOT the runtime: cost-model feedback and
+        # measured winners survive compactions (DESIGN.md §11).  Raises
+        # on an unknown plan_mode before any build work happens.
+        self.planner = AdaptivePlanner(self.config.plan_mode)
         for s in sequences:
             self.esam.add_sequence(s)
         self.esam.finalize()
@@ -322,28 +333,49 @@ class VectorMaton:
         rt = runtime if runtime is not None else self.runtime
         key = pred.key()
         version = rt.delta.version
+        planner = self.planner
         hit = rt._pred_cache.get(key)
         if hit is not None:
-            if hit[0] == version:
+            if (hit[0] == version
+                    and hit[2] == planner.winner_for(hit[1].key, version)):
                 rt._pred_cache.pop(key)          # re-insert: LRU refresh
                 rt._pred_cache[key] = hit
                 return hit[1]
-            del rt._pred_cache[key]              # version-stale: dead entry
-        cp = compile_predicate(pred, self.esam, rt)
+            # version-stale, or the planner measured a winning strategy
+            # after this entry compiled (residual yield collapse,
+            # cost-model demotion) — recompile so the plan replays it
+            del rt._pred_cache[key]
+        cp = compile_predicate(pred, self.esam, rt, planner=planner)
         if len(rt._pred_cache) >= self._PRED_CACHE_MAX:
-            for stale_key in [k for k, (v, _) in rt._pred_cache.items()
-                              if v != version]:
+            # one pass: purge version-stale entries (dead weight that can
+            # never hit again), and only if that freed nothing evict the
+            # LRU head.  The old two-step (purge loop THEN an
+            # unconditional `while >= MAX` pop) re-checked capacity after
+            # the purge and popped the oldest LIVE entry even when the
+            # purge had already made room — evicting a just-refreshed hot
+            # entry on insertion at exactly-full capacity.
+            stale = [k for k, (v, *_rest) in rt._pred_cache.items()
+                     if v != version]
+            for stale_key in stale:
                 del rt._pred_cache[stale_key]
-        while len(rt._pred_cache) >= self._PRED_CACHE_MAX:
-            rt._pred_cache.pop(next(iter(rt._pred_cache)))
-        rt._pred_cache[key] = (version, cp)
+            if not stale:
+                rt._pred_cache.pop(next(iter(rt._pred_cache)))
+        rt._pred_cache[key] = (version, cp,
+                               planner.winner_for(cp.key, version))
         return cp
 
     def plan(self, patterns: Sequence,
              runtime: Optional[PackedRuntime] = None) -> QueryPlan:
         """Compile each request's predicate and coalesce identical
-        predicates into one plan entry each (the host planner half)."""
+        predicates into one plan entry each (the host planner half).
+
+        Wave head: the ONLY point where executor feedback folds into the
+        cost model (planner.absorb), so a plan is compiled against one
+        frozen cost state and generation-stamped plans stay immutable —
+        single-chip, pipelined (engine.plan_batch lands here) and sharded
+        planning all share this cadence (DESIGN.md §11)."""
         rt = runtime if runtime is not None else self.runtime
+        self.planner.absorb()
         return rt.plan([self.compile(p, rt) for p in patterns])
 
     def query(self, v_q: np.ndarray, pattern, k: int,
@@ -569,6 +601,9 @@ class VectorMaton:
                 out[f"sq8_{key}"] = val
             for key, val in rt.wave_times.items():
                 out[f"time_{key}"] = val
+        # adaptive-planner trace (DESIGN.md §11): estimates vs observed,
+        # strategy switches, cache-replayed winners
+        out.update(self.planner.stats())
         return out
 
     def _promote(self, raw_ids: np.ndarray, u: int) -> _StateIndex:

@@ -23,6 +23,7 @@ embeddings.
 from __future__ import annotations
 
 import string
+import zlib
 from dataclasses import dataclass
 from typing import List, Tuple
 
@@ -60,8 +61,12 @@ def make_corpus(name: str, seed: int = 0, scale: float = 1.0
                 ) -> Tuple[np.ndarray, List[str]]:
     """Returns (vectors (n, dim) float32, sequences list[str])."""
     spec = SPECS[name]
-    rng = np.random.default_rng(np.random.SeedSequence([hash(name) % 2**31,
-                                                        seed]))
+    # crc32, not hash(): str hashing is randomized per process
+    # (PYTHONHASHSEED), which silently regenerated a different corpus
+    # every run — any cross-run baseline pinned on corpus content was
+    # comparing apples to oranges
+    rng = np.random.default_rng(np.random.SeedSequence(
+        [zlib.crc32(name.encode()) % 2 ** 31, seed]))
     n = max(8, int(spec.n * scale))
 
     # --- sequences -----------------------------------------------------

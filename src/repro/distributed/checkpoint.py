@@ -175,6 +175,11 @@ def load_vectormaton(cls, path: str):
     vm.deleted = set(int(x) for x in states["deleted"])
     vm._lock = threading.Lock()
     vm._compact_lock = threading.Lock()
+    # fresh adaptive planner (cost-model EWMAs are host-local runtime
+    # measurements — deliberately not persisted; calibration defaults
+    # re-seed it and feedback re-accumulates on the restored host)
+    from ..core.planner import AdaptivePlanner
+    vm.planner = AdaptivePlanner(config.plan_mode)
     # write-path counters: resume generation numbering past the saved one
     # (the restored runtime is a fresh generation — the saved delta's
     # inserts are already embedded in the state indexes / vector table)

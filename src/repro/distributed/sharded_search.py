@@ -33,6 +33,7 @@ bit-exactness parity oracle.
 from __future__ import annotations
 
 import functools
+import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -758,6 +759,7 @@ def sharded_plan_dispatch(mesh: Mesh, base, runtime, queries, plan,
                      jnp.asarray(towner_np), sh.vectors, sh.deleted,
                      sh.csr_local)
         dv = gv = None
+        t_sweep = time.perf_counter()
         streak_out = (getattr(runtime, "sq8_escalate", True)
                       and getattr(runtime, "_sq8_bad_streak", 0)
                       >= getattr(runtime, "SQ8_MAX_STREAK", 3))
@@ -788,6 +790,15 @@ def sharded_plan_dispatch(mesh: Mesh, base, runtime, queries, plan,
             fn = _sweep_fn(mesh, axis, n_desc, k, metric, sh.local_n)
             dv, gv = fn(*fp32_args)
             ops.record_launch("sharded_sweep", key)
+        planner = getattr(runtime, "planner", None)
+        if planner is not None:
+            # the sharded sweep is the distributed scan strategy: report
+            # its observed cost (rows ranked × query rows) into the
+            # index-owned cost model — folded at the next wave head, like
+            # every other executor observation (DESIGN.md §11)
+            planner.observe("scan",
+                            (int(dlen_np.sum()) + t_total) * q_n,
+                            (time.perf_counter() - t_sweep) * 1e3)
         desc_bytes = sh.shards * d_pad * 8 + d_pad * 4 + t_pad * 4
         tf["shard_descriptor_bytes"] += desc_bytes
         tf["shard_query_bytes"] += q_pad * (d_dim * 4 + 4)

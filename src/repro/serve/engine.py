@@ -118,7 +118,11 @@ class RetrievalEngine:
                    ef_search: int = 64) -> WavePlan:
         """Host planning stage: snapshot one runtime generation, compile
         every predicate (pred-cache), coalesce into a QueryPlan.  Pure
-        host work — safe on a background thread under the engine lock."""
+        host work — safe on a background thread under the engine lock.
+        Lands on ``VectorMaton.plan``, the wave head where pending
+        executor feedback folds into the adaptive planner's cost model
+        (DESIGN.md §11) — so cost state is frozen per wave and a
+        dispatched plan is never re-decided mid-flight."""
         with self._lock:
             rt = self.index.snapshot()
             t0 = time.perf_counter()

@@ -78,6 +78,10 @@ class PipelinedExecutor:
     executor thread owns ``dispatch_batch`` (launches, under the engine
     lock, brief) and ``fetch_batch`` (device sync, outside the lock).
     The in-flight window is one wave: dispatch N+1, then fetch N.
+    Adaptive-planner feedback (DESIGN.md §11) needs no extra plumbing
+    here: executor timings buffer in the planner and fold at the next
+    ``plan_batch`` (the wave head), so the wave in flight and the wave
+    being planned never share mutable cost state.
 
     Counters (merged into ``RetrievalEngine.maintenance_stats`` via
     ``engine.pipeline_stats``):

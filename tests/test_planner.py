@@ -1,0 +1,286 @@
+"""Adaptive planner (DESIGN.md §11): selectivity estimator interval
+correctness, cost-model feedback/demotion mechanics, residual escalation
+replay, and the plan_mode parity oracle — adaptive must stay bit-identical
+to static on exactness domains across the single-chip, sharded, and
+pipelined executors, including mid-delta."""
+
+import numpy as np
+import pytest
+
+from repro.core.planner import (AdaptivePlanner, CostModel, Interval,
+                                SelectivityEstimator)
+from repro.core.predicate import (And, Contains, Like, Not, Or,
+                                  parse_predicate, normalize)
+from repro.core.vectormaton import VectorMaton, VectorMatonConfig
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(41)
+    n = 300
+    seqs = ["".join(rng.choice(list("abcd"),
+                               size=rng.integers(5, 16))) for _ in range(n)]
+    vecs = rng.standard_normal((n, 16)).astype(np.float32)
+    return vecs, seqs
+
+
+PREDICATES = [
+    "ab", "a AND b", "ab AND cd", "a AND b AND c", "ab OR cd",
+    "NOT ab", "a AND NOT cd", "(ab OR cd) AND NOT da",
+    "LIKE '%a%b%'", "a AND LIKE '%c%d%'", "LIKE 'a%' OR NOT LIKE '%b%'",
+]
+
+
+# --------------------------------------------------------------------- #
+# estimator: interval bounds bracket the truth
+# --------------------------------------------------------------------- #
+
+def test_estimator_intervals_bracket_true_cardinality(corpus):
+    from repro.core.predicate import _Ctx
+    vecs, seqs = corpus
+    vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=25, M=8, ef_con=40))
+    est = SelectivityEstimator()
+    ctx = _Ctx(vm.esam, vm.runtime)
+    for ptxt in PREDICATES:
+        node = normalize(parse_predicate(ptxt))
+        disjuncts = node.children if isinstance(node, Or) else [node]
+        for d in disjuncts:
+            iv = est.estimate(d, ctx)
+            true = sum(1 for s in seqs if d.matches(s))
+            assert 0 <= iv.lo <= true <= iv.hi <= len(seqs), \
+                (ptxt, d.key(), iv, true)
+            if iv.exact:
+                assert iv.lo == iv.hi == true, (d.key(), iv, true)
+    # leaves with a frozen cover are exact by construction
+    iv = est.estimate(Contains("ab"), ctx)
+    assert iv.exact and iv.lo == sum(1 for s in seqs if "ab" in s)
+
+
+def test_estimator_sampling_tightens_within_bounds():
+    """Above the cutoff the sampled popcount tightens the And interval
+    but never moves it outside the proven Fréchet bracket."""
+    from repro.core.predicate import _Ctx
+    rng = np.random.default_rng(5)
+    n = 6000
+    seqs = ["".join(rng.choice(list("ab"), size=8)) for _ in range(n)]
+    vecs = rng.standard_normal((n, 8)).astype(np.float32)
+    vm = VectorMaton(vecs, seqs, VectorMatonConfig(T=10 ** 9))
+    est = SelectivityEstimator()
+    ctx = _Ctx(vm.esam, vm.runtime)
+    node = normalize(parse_predicate("a AND b"))
+    iv = est.estimate(node, ctx)
+    true = sum(1 for s in seqs if "a" in s and "b" in s)
+    assert est.n_sampled >= 1
+    assert iv.lo <= true <= iv.hi
+    # the point estimate is the quantity the CI gate bounds at ≤ 2×
+    p = max(1, iv.point)
+    assert max(p / true, true / p) <= 2.0
+
+
+def test_interval_point_is_geometric_midpoint():
+    assert Interval(4, 4, True).point == 4
+    assert Interval(100, 400, False).point == 200
+    assert Interval(0, 0, True).point == 0
+
+
+# --------------------------------------------------------------------- #
+# cost model: seeds, EWMA folding, measured-evidence demotion margin
+# --------------------------------------------------------------------- #
+
+def test_cost_model_cold_uses_calibration_seeds():
+    cm = CostModel()
+    cost, measured = cm.score("scan", 1000)
+    assert not measured
+    assert cost == pytest.approx(cm.DEFAULT_SETUP["scan"]
+                                 + cm.DEFAULT_UNIT["scan"] * 1000)
+
+
+def test_cost_model_ewma_folds_only_on_absorb():
+    cm = CostModel()
+    for _ in range(cm.MIN_OBS):
+        cm.observe("scan", 1024, 10.0)
+    # pending observations must not leak into scoring before absorb
+    assert cm.unit_cost("scan", 1024)[1] is False
+    assert cm.absorb() == cm.MIN_OBS
+    unit, measured = cm.unit_cost("scan", 1024)
+    assert measured and unit == pytest.approx(10.0 / 1024)
+    # nearest-bucket fallback within the radius, default outside it
+    assert cm.unit_cost("scan", 2048)[1] is True
+    assert cm.unit_cost("scan", 1024 * 2 ** 5)[1] is False
+
+
+def test_planner_demotion_needs_measured_margin():
+    p = AdaptivePlanner("adaptive")
+    kw = dict(key="a AND b", version=0, sel=500, n_graphs=2,
+              static_strategy="filtered_graph")
+    # cold: must reproduce the static rule exactly (parity invariant)
+    assert p.choose_conjunction(**kw) == "filtered_graph"
+    # measured evidence: scan cheap, filtered beam expensive, with margin
+    for _ in range(CostModel.MIN_OBS):
+        p.observe("scan", 500, 0.01)
+        p.observe("filtered_graph", 2 * 64, 50.0)
+    p.absorb()
+    assert p.choose_conjunction(**kw) == "scan"
+    assert p.counters["demotions"] == 1
+    # the measured winner replays at the same (key, version)
+    assert p.winner_for("a AND b", 0) == "scan"
+    assert p.choose_conjunction(**kw) == "scan"
+    assert p.counters["cache_replays"] == 1
+    # scan is always legal; filtered_graph never overrides a static scan
+    assert p.choose_conjunction(key="x", version=0, sel=5, n_graphs=0,
+                                static_strategy="scan") == "scan"
+
+
+def test_planner_static_mode_is_inert():
+    p = AdaptivePlanner("static")
+    p.observe("scan", 100, 1.0)
+    p.absorb()
+    assert p.cost.folds == 0 and p.counters["absorbs"] == 0
+    assert p.choose_conjunction(key="k", version=0, sel=10, n_graphs=1,
+                                static_strategy="filtered_graph") \
+        == "filtered_graph"
+    assert not p.residual_full("k", 0)
+    with pytest.raises(ValueError, match="plan_mode"):
+        AdaptivePlanner("greedy")
+
+
+def test_config_plan_mode_validation(corpus):
+    vecs, seqs = corpus
+    with pytest.raises(ValueError, match="plan_mode"):
+        VectorMaton(vecs[:4], seqs[:4],
+                    VectorMatonConfig(plan_mode="bogus"))
+    vm = VectorMaton(vecs[:4], seqs[:4], VectorMatonConfig())
+    assert vm.config.plan_mode == "adaptive"      # new default
+    assert vm.runtime.planner is vm.planner
+
+
+# --------------------------------------------------------------------- #
+# residual escalation: yield collapse -> full scan, replayed at compile
+# --------------------------------------------------------------------- #
+
+def test_residual_yield_collapse_switches_and_replays():
+    """A prefilter whose verification yield collapses (dense CONTAINS
+    prefilter, sparse LIKE verification) escalates to the full scan in
+    one step, counts planner_residual_switches, and re-compiles with
+    residual_full set — with bit-identical results throughout."""
+    rng = np.random.default_rng(9)
+    n = 400
+    # every sequence contains 'a'; only 3 START with 'a' -> LIKE 'a%...'
+    # verification yield collapses against the CONTAINS-'a' prefilter
+    seqs = ["b" + "".join(rng.choice(list("abc"), size=10))
+            for _ in range(n - 3)] + ["abc" * 4] * 3
+    vecs = rng.standard_normal((n, 12)).astype(np.float32)
+    k = 8
+    res = {}
+    for mode in ("static", "adaptive"):
+        vm = VectorMaton(vecs, seqs,
+                         VectorMatonConfig(T=10 ** 9, plan_mode=mode))
+        q = np.zeros(12, np.float32)
+        res[mode] = vm.query(q, "LIKE 'a%'", k)
+        if mode != "adaptive":
+            continue
+        stats = vm.maintenance_stats()
+        assert stats["planner_residual_switches"] >= 1
+        cp = vm.compile("LIKE 'a%'")
+        assert all(s.residual_full for s in cp.sources
+                   if s.strategy == "residual")
+        assert stats["planner_pending_feedback"] >= 0
+        # replayed plan still answers identically
+        d2, i2 = vm.query(q, "LIKE 'a%'", k)
+        assert np.array_equal(res["adaptive"][1], i2)
+    assert np.array_equal(res["static"][1], res["adaptive"][1])
+    np.testing.assert_allclose(res["static"][0], res["adaptive"][0],
+                               rtol=1e-6)
+
+
+# --------------------------------------------------------------------- #
+# parity oracle: adaptive ≡ static, bit-identical (acceptance criterion)
+# --------------------------------------------------------------------- #
+
+def _parity_queries(corpus, n=8):
+    vecs, _ = corpus
+    rng = np.random.default_rng(3)
+    return rng.standard_normal((n, vecs.shape[1])).astype(np.float32)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_parity_single_chip_mid_delta(corpus, backend):
+    vecs, seqs = corpus
+    queries = _parity_queries(corpus, len(PREDICATES))
+    rng = np.random.default_rng(13)
+    ins = [(rng.standard_normal(vecs.shape[1]).astype(np.float32), s)
+           for s in ("abab", "dcba", "aabb")]
+    outs = {}
+    for mode in ("static", "adaptive"):
+        vm = VectorMaton(vecs, seqs,
+                         VectorMatonConfig(T=25, M=8, ef_con=40,
+                                           backend=backend, plan_mode=mode,
+                                           auto_compact=False))
+        cold = vm.query_batch(queries, PREDICATES, 7)
+        for v, s in ins:
+            vm.insert(v, s)
+        warm = vm.query_batch(queries, PREDICATES, 7)   # mid-delta
+        vm.compact()
+        post = vm.query_batch(queries, PREDICATES, 7)
+        outs[mode] = cold + warm + post
+    for r, ((sd, si), (ad, ai)) in enumerate(zip(outs["static"],
+                                                 outs["adaptive"])):
+        assert np.array_equal(si, ai), PREDICATES[r % len(PREDICATES)]
+        np.testing.assert_allclose(sd, ad, rtol=1e-6)
+
+
+def test_parity_sharded_and_pipelined(corpus):
+    """Sharded and pipelined planning thread the same planner: feedback
+    folds at wave heads only, so stamped plans stay immutable and both
+    executors answer bit-identically in either plan_mode."""
+    import jax
+    from repro.serve.engine import RetrievalEngine
+    from repro.serve.pipeline import PipelinedExecutor
+    vecs, seqs = corpus
+    queries = _parity_queries(corpus, 6)
+    pats = ["a AND b", "ab AND cd", "LIKE '%a%b%'", "NOT ab",
+            "ab OR cd", "a AND NOT cd"]
+    outs = {}
+    for mode in ("static", "adaptive"):
+        cfg = VectorMatonConfig(T=25, M=8, ef_con=40, backend="jax",
+                                plan_mode=mode)
+        mesh = jax.make_mesh((1,), ("data",))
+        eng = RetrievalEngine(vecs, seqs, cfg, mesh=mesh)
+        sharded = eng.query_batch(queries, pats, 5)
+        eng2 = RetrievalEngine(vecs, seqs, cfg)
+        pipe = PipelinedExecutor(eng2)
+        t = [pipe.submit(queries[i:i + 2], pats[i:i + 2], 5)
+             for i in range(0, len(pats), 2)]
+        piped = [r for tt in t for r in tt.wait()]
+        pipe.close()
+        outs[mode] = sharded + piped
+        if mode == "adaptive":
+            stats = eng.maintenance_stats()
+            assert stats["planner_mode"] == "adaptive"
+            assert stats["planner_absorbs"] >= 1
+    for (sd, si), (ad, ai) in zip(outs["static"], outs["adaptive"]):
+        assert np.array_equal(si, ai)
+        np.testing.assert_allclose(sd, ad, rtol=1e-6)
+
+
+def test_maintenance_stats_exposes_planner_counters(corpus):
+    vecs, seqs = corpus
+    vm = VectorMaton(vecs[:50], seqs[:50],
+                     VectorMatonConfig(T=25, M=8, ef_con=40))
+    vm.query_batch(_parity_queries(corpus, 2)[:, :vecs.shape[1]],
+                   ["a AND b", "LIKE '%a%b%'"], 5)
+    stats = vm.maintenance_stats()
+    for key in ("planner_mode", "planner_scored", "planner_estimates",
+                "planner_est_checked", "planner_est_within_2x",
+                "planner_feedback_updates", "planner_absorbs",
+                "planner_demotions", "planner_residual_switches",
+                "planner_cache_replays", "planner_pending_feedback",
+                "planner_cost_folds"):
+        assert key in stats, key
+    assert stats["planner_scored"] >= 1
+    assert stats["planner_estimates"] >= 1
+    # wave head ran at plan time; observations from the executed wave sit
+    # pending until the NEXT wave head (stamped-plan immutability)
+    assert stats["planner_absorbs"] >= 1
+    vm.plan(["a AND b"])                     # next wave head folds them
+    assert vm.planner.cost.folds >= 1

@@ -136,9 +136,42 @@ def test_pred_cache_thrash_keeps_hot_and_purges_stale():
         vm.compile(Contains("b" * (j + 2)))
     # the stale generation is gone wholesale; only live entries remain
     assert all(v == rt.delta.version
-               for v, _ in rt._pred_cache.values())
+               for v, *_ in rt._pred_cache.values())
     assert len(rt._pred_cache) <= 5
     assert hot_key in rt._pred_cache
+
+
+def test_pred_cache_hot_survives_insert_at_full_capacity_after_purge():
+    """Regression (PR 10): eviction was a stale-purge loop followed by an
+    UNCONDITIONAL `while len >= MAX: pop oldest` — when the purge had
+    already freed space, the while still popped the LRU head, which can
+    be a just-refreshed hot entry.  One-pass eviction must only evict a
+    live entry when the stale purge freed nothing."""
+    rng = np.random.default_rng(7)
+    seqs = ["ab", "ba", "aa", "bb"]
+    vecs = np.eye(4, 4, dtype=np.float32)
+    vm = VectorMaton(vecs, seqs,
+                     VectorMatonConfig(T=10 ** 9, auto_compact=False))
+    rt = vm.runtime
+    hot = Contains("a") & Contains("b")
+    hot_key = vm.compile(hot).key
+    # fill to exactly-full capacity with live entries
+    j = 0
+    while len(rt._pred_cache) < vm._PRED_CACHE_MAX:
+        vm.compile(Contains("b" * (j + 2)))
+        j += 1
+    # stale every entry, then re-warm ONLY the hot one: the cache is at
+    # exactly-full capacity with MAX-1 stale squatters + 1 live hot entry
+    vm.insert(rng.standard_normal(4).astype(np.float32), "ab")
+    hot_cp = vm.compile(hot)
+    assert len(rt._pred_cache) == vm._PRED_CACHE_MAX
+    # next insertion purges the stale squatters; the hot entry — oldest
+    # LIVE entry, the old while-loop's victim — must survive
+    vm.compile(Contains("b") & Contains("a" * 2))
+    assert hot_key in rt._pred_cache, \
+        "hot entry evicted although the stale purge already freed space"
+    assert rt._pred_cache[hot_key][1] is hot_cp
+    assert len(rt._pred_cache) <= vm._PRED_CACHE_MAX
 
 
 def test_nnf_pushes_not_to_leaves():
@@ -493,3 +526,125 @@ else:
                              "(pip install -r requirements-dev.txt)")
     def test_render_reparse_roundtrip():
         pass
+
+
+# --------------------------------------------------------------------- #
+# property test: strategy invariance under the adaptive planner (PR 10)
+# --------------------------------------------------------------------- #
+
+def _random_strategy_preds(rng, n):
+    """Seeded random predicate ASTs (depth ≤ 2) over the abcd alphabet —
+    the same shape the hypothesis tree strategy draws, but runnable on
+    hosts without hypothesis (the property still checks N random trees
+    deterministically)."""
+    def leaf():
+        if rng.random() < 0.7:
+            return Contains("".join(rng.choice(list("abcd"),
+                                               size=rng.integers(1, 3))))
+        return Like("".join(rng.choice(list("abcd%_"),
+                                       size=rng.integers(2, 5))))
+
+    def tree(depth):
+        r = rng.random()
+        if depth == 0 or r < 0.3:
+            return leaf()
+        if r < 0.65:
+            return And([tree(depth - 1)
+                        for _ in range(rng.integers(2, 4))])
+        if r < 0.9:
+            return Or([tree(depth - 1)
+                       for _ in range(rng.integers(2, 4))])
+        return Not(tree(depth - 1))
+    return [tree(2) for _ in range(n)]
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_property_strategy_invariance(corpus, backend):
+    """For random predicates over the seeded corpus, every legal strategy
+    the planner can pick — the static choice, the adaptive pick, and the
+    forced exact-safe demotion — returns identical ids+distances on an
+    exactness domain (raw-only index: every emitted strategy is exact),
+    on both backends, including mid-delta."""
+    vecs, seqs = corpus
+    rng = np.random.default_rng(23)
+    preds = _random_strategy_preds(rng, 10)
+    queries = rng.standard_normal(
+        (len(preds), vecs.shape[1])).astype(np.float32)
+    ins_vecs = rng.standard_normal((3, vecs.shape[1])).astype(np.float32)
+    ins_seqs = ["abab", "cdcd", "acbd"]
+    k = 6
+
+    def run(plan_mode, force=None):
+        vm = VectorMaton(vecs, seqs,
+                         VectorMatonConfig(T=10 ** 9, backend=backend,
+                                           plan_mode=plan_mode,
+                                           auto_compact=False))
+        vm.planner.force_strategy = force
+        cold = vm.query_batch(queries, preds, k)
+        for v, s in zip(ins_vecs, ins_seqs):     # mid-delta
+            vm.insert(v, s)
+        warm = vm.query_batch(queries, preds, k)
+        return vm, cold + warm
+
+    _, want = run("static")
+    for mode, force in (("adaptive", None), ("adaptive", "scan")):
+        vm, got = run(mode, force)
+        for r, ((wd, wi), (gd, gi)) in enumerate(zip(want, got)):
+            p = preds[r % len(preds)]
+            assert np.array_equal(wi, gi), (mode, force, p.key())
+            np.testing.assert_allclose(wd, gd, rtol=1e-6,
+                                       err_msg=f"{mode}/{force}")
+        assert vm.maintenance_stats()["planner_mode"] == "adaptive"
+
+    # residual escalation replay: a measured yield collapse makes the
+    # re-compiled predicate start the over-fetch loop at the full
+    # prefilter — the verified answer must not move
+    vm = VectorMaton(vecs, seqs,
+                     VectorMatonConfig(T=10 ** 9, backend=backend))
+    ptxt = "LIKE 'a%'"
+    d0, i0 = vm.query(queries[0], ptxt, k)
+    cp = vm.compile(ptxt)
+    vm.planner.note_residual_switch(cp.key, vm.runtime.delta.version)
+    cp2 = vm.compile(ptxt)
+    assert cp2 is not cp                    # winner change invalidated it
+    assert all(s.residual_full for s in cp2.sources
+               if s.strategy == "residual")
+    d1, i1 = vm.query(queries[0], ptxt, k)
+    assert np.array_equal(i0, i1)
+    np.testing.assert_allclose(d0, d1, rtol=1e-6)
+
+
+def test_property_demotion_is_exact(corpus):
+    """On a graph-backed corpus the planner's only legal divergence from
+    the static rule is the filtered_graph -> scan demotion.  Forcing it
+    must return the EXACT brute-force answer (scan is exact over the
+    composed conjunction mask), and cold adaptive must stay bit-identical
+    to static (demotion requires measured evidence)."""
+    vecs, seqs = corpus
+    rng = np.random.default_rng(29)
+    conj = ["a AND b", "b AND c", "a AND d"]
+    queries = rng.standard_normal(
+        (len(conj), vecs.shape[1])).astype(np.float32)
+    cfg = dict(T=10, M=8, ef_con=60)
+    vm_s = VectorMaton(vecs, seqs,
+                       VectorMatonConfig(plan_mode="static", **cfg))
+    vm_a = VectorMaton(vecs, seqs,
+                       VectorMatonConfig(plan_mode="adaptive", **cfg))
+    assert vm_s.plan(conj).strategies["filtered_graph"] >= 1
+    # cold adaptive == static choices AND static results, bit-identical
+    assert (vm_a.plan(conj).strategies
+            == vm_s.plan(conj).strategies)
+    rs, ra = (vm.query_batch(queries, conj, 10, ef_search=128)
+              for vm in (vm_s, vm_a))
+    for (sd, si), (ad, ai) in zip(rs, ra):
+        assert np.array_equal(si, ai)
+        np.testing.assert_allclose(sd, ad, rtol=1e-6)
+    # forced demotion: exact scan of the composed intersection (the
+    # force hook applies at compile time, so drop the cached plans)
+    vm_a.planner.force_strategy = "scan"
+    vm_a.runtime._pred_cache.clear()
+    forced = vm_a.query_batch(queries, conj, 10, ef_search=128)
+    assert vm_a.plan(conj).strategies.get("filtered_graph", 0) == 0
+    for r, ptxt in enumerate(conj):
+        want = _brute(vecs, seqs, parse_predicate(ptxt), queries[r], 10)
+        assert forced[r][1].tolist() == want, ptxt
